@@ -1,0 +1,95 @@
+"""Paper Fig. 6: CrossLight (monolithic) vs 2.5D-CrossLight-Elec-Interposer vs
+2.5D-CrossLight-SiPh-Interposer — normalized power, latency, energy-per-bit
+over six CNNs, plus the paper's headline average ratios:
+
+  SiPh vs monolithic : 6.6x lower latency, 2.8x lower EPB
+  SiPh vs electrical : 34x lower latency, 15.8x lower EPB
+  LeNet5             : the stated exception (too small to use the platform)
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (
+    CNN_WORKLOADS,
+    crosslight_25d_elec,
+    crosslight_25d_siph,
+    evaluate_accelerator,
+    monolithic_crosslight,
+)
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+PAPER_CLAIMS = {
+    "mono_over_siph_latency": 6.6,
+    "mono_over_siph_epb": 2.8,
+    "elec_over_siph_latency": 34.0,
+    "elec_over_siph_epb": 15.8,
+}
+
+
+def run(csv: bool = True) -> dict:
+    accels = [monolithic_crosslight(), crosslight_25d_elec(), crosslight_25d_siph()]
+    rows = []
+    t0 = time.perf_counter()
+    for name, factory in CNN_WORKLOADS.items():
+        wl = factory()
+        reps = {a.name: evaluate_accelerator(a, wl) for a in accels}
+        m = reps["CrossLight"]
+        e = reps["2.5D-CrossLight-Elec"]
+        s = reps["2.5D-CrossLight-SiPh"]
+        rows.append(
+            {
+                "cnn": wl.name,
+                "latency_s": {k: r.latency_s for k, r in reps.items()},
+                "power_w": {k: r.power_w for k, r in reps.items()},
+                "epb_pj": {k: r.epb_j * 1e12 for k, r in reps.items()},
+                "mono_over_siph_latency": m.latency_s / s.latency_s,
+                "mono_over_siph_epb": m.epb_j / s.epb_j,
+                "elec_over_siph_latency": e.latency_s / s.latency_s,
+                "elec_over_siph_epb": e.epb_j / s.epb_j,
+            }
+        )
+    us = (time.perf_counter() - t0) * 1e6 / max(1, len(rows))
+
+    avg = {
+        k: float(np.mean([r[k] for r in rows]))
+        for k in PAPER_CLAIMS
+    }
+    # paper: averages include all six CNNs (LeNet5 drags the mean down; the
+    # paper calls it out as the exception where the 2.5D platform is
+    # inefficiently utilized)
+    checks = {
+        # within a factor-2 band of the paper's reported averages — the paper
+        # used a cycle-accurate in-house simulator; ours is analytical
+        k: (avg[k] >= PAPER_CLAIMS[k] / 2.0) and (avg[k] <= PAPER_CLAIMS[k] * 2.0)
+        for k in PAPER_CLAIMS
+    }
+    lenet = next(r for r in rows if r["cnn"] == "LeNet5")
+    checks["lenet5_monolithic_competitive"] = lenet["mono_over_siph_epb"] < 1.5
+
+    out = {"rows": rows, "avg": avg, "paper": PAPER_CLAIMS, "checks": checks}
+    ARTIFACTS.mkdir(exist_ok=True)
+    (ARTIFACTS / "fig6_crosslight.json").write_text(json.dumps(out, indent=2))
+
+    if csv:
+        for r in rows:
+            print(
+                f"fig6/{r['cnn']},{us:.1f},"
+                f"m/s_L={r['mono_over_siph_latency']:.2f};m/s_EPB={r['mono_over_siph_epb']:.2f};"
+                f"e/s_L={r['elec_over_siph_latency']:.2f};e/s_EPB={r['elec_over_siph_epb']:.2f}"
+            )
+        for k in PAPER_CLAIMS:
+            print(f"fig6/avg/{k},{us:.1f},{avg[k]:.2f} (paper {PAPER_CLAIMS[k]})")
+        for k, v in checks.items():
+            print(f"fig6/check/{k},{us:.1f},{'PASS' if v else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

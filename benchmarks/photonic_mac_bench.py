@@ -1,0 +1,59 @@
+"""Photonic-MAC kernel microbenchmark: interpret-mode correctness timing +
+QAT distortion across MR resolutions (the 2.5D-CrossLight precision/energy
+trade-off), and the XLA-reference throughput on this host as the baseline.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.photonic_mac import quantize_weights
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv: bool = True) -> dict:
+    key = jax.random.PRNGKey(0)
+    m = k = n = 512
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    exact = np.asarray(x @ w)
+
+    rows = []
+    for bits in (8, 6, 4, 2):
+        wq, sc = quantize_weights(w, bits=bits)
+        f = jax.jit(lambda xx, qq, ss: ref.photonic_mac_ref(xx, qq, ss))
+        secs = _time(f, x, wq, sc)
+        out = np.asarray(f(x, wq, sc))
+        rel = float(np.linalg.norm(out - exact) / np.linalg.norm(exact))
+        rows.append({"bits": bits, "us": secs * 1e6, "rel_err": rel,
+                     "gflops": 2 * m * k * n / secs / 1e9})
+    out = {"rows": rows, "shape": [m, k, n]}
+    ARTIFACTS.mkdir(exist_ok=True)
+    (ARTIFACTS / "photonic_mac.json").write_text(json.dumps(out, indent=1))
+    if csv:
+        for r in rows:
+            print(f"photonic_mac/{r['bits']}bit,{r['us']:.1f},"
+                  f"rel_err={r['rel_err']:.4f};gflops={r['gflops']:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

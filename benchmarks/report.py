@@ -1,0 +1,104 @@
+"""Regenerate the generated-tables section of EXPERIMENTS.md from the
+dry-run artifacts (single source of truth).
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline import load_cells, summarize, ARTIFACTS  # noqa: E402
+
+EXPERIMENTS = Path(__file__).resolve().parents[1] / "EXPERIMENTS.md"
+MARK = "<!-- GENERATED TABLES (python -m benchmarks.report) -->"
+
+PEAK = 197e12
+
+
+def mfu_bound(r):
+    rf = r["roofline"]
+    bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+    return (rf["model_flops"] / PEAK) / bound if bound > 0 else 0.0
+
+
+def table(mesh: str, include_tagged=False) -> str:
+    rows = [
+        "| arch | shape | strategy | compute (s) | memory (s) | collective (s) "
+        "| bottleneck | MFU bound | useful-FLOPs | args GiB/dev |",
+        "|---|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for r in load_cells(mesh, include_tagged=include_tagged):
+        tag = r.get("tag", "")
+        strat = r.get("strategy", "") + (f"+{tag}" if tag else "")
+        if r["status"] == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                        f"SKIP (sub-quadratic attn required) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {strat} | — | — | — | "
+                        f"**ERROR** | — | — | — |")
+            continue
+        s = summarize(r)
+        rows.append(
+            f"| {s['arch']} | {s['shape']} | {strat} | {s['compute_ms']/1e3:.3f} | "
+            f"{s['memory_ms']/1e3:.3f} | {s['collective_ms']/1e3:.3f} | "
+            f"**{s['bottleneck']}** | {mfu_bound(r):.3f} | "
+            f"{s['useful_flops_frac']:.2f} | {s['args_gib']:.2f} |")
+    return "\n".join(rows)
+
+
+def perf_table() -> str:
+    """Hillclimb tag artifacts for the three chosen cells."""
+    cells = [
+        ("deepseek_67b", ["", "fsdp_all", "fsdp_all_dots", "fsdp_all_dots_w8"]),
+        ("yi_34b", ["", "fsdp_all", "fsdp_all_dots", "fsdp_all_dots_w8"]),
+        ("zamba2_1p2b", ["", "fsdp_all", "fsdp_all_dots", "fsdp_all_dots_w8",
+                         "fsdp_all_dotsall_w8"]),
+    ]
+    rows = ["| cell | variant | compute (s) | memory (s) | collective (s) | "
+            "bottleneck | MFU bound | useful-FLOPs |",
+            "|---|---|---:|---:|---:|---|---:|---:|"]
+    for arch, tags in cells:
+        for tag in tags:
+            name = f"{arch}__train_4k__single" + (f"__{tag}" if tag else "")
+            p = ARTIFACTS / f"{name}.json"
+            if not p.exists():
+                continue
+            r = json.loads(p.read_text())
+            if r["status"] != "ok":
+                continue
+            r["tag"] = tag
+            rf = r["roofline"]
+            label = tag or "baseline (tp_fsdp)"
+            rows.append(
+                f"| {arch}/train_4k | {label} | {rf['compute_s']:.3f} | "
+                f"{rf['memory_s']:.3f} | {rf['collective_s']:.3f} | "
+                f"**{rf['bottleneck']}** | {mfu_bound(r):.3f} | "
+                f"{rf['useful_flops_frac']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    body = [MARK, ""]
+    body.append("### §Perf final table — the three hillclimbed cells "
+                "(single pod, 256 chips)\n")
+    body.append(perf_table())
+    body.append("\n### §Roofline — single-pod baselines (paper-faithful "
+                "strategy per arch), all 40 cells\n")
+    body.append(table("single"))
+    body.append("\n### §Roofline — multi-pod (2×16×16 = 512 chips), "
+                "pod-axis proof\n")
+    body.append(table("multi"))
+    text = EXPERIMENTS.read_text()
+    head = text.split(MARK)[0].rstrip()
+    EXPERIMENTS.write_text(head + "\n\n" + "\n".join(body) + "\n")
+    print(f"wrote generated tables into {EXPERIMENTS}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Roofline table (§Roofline): per (arch x shape x mesh) cell, the three
+terms derived from the compiled dry-run, the dominant bottleneck, MFU bound,
+and the MODEL_FLOPS/HLO_FLOPS useful-compute ratio.
+
+Reads benchmarks/artifacts/dryrun/*.json (produced by repro.launch.dryrun).
+Emits CSV rows for benchmarks.run and a markdown table for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch.hlo_analysis import PEAK_FLOPS
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(mesh: str | None = None, include_tagged: bool = False):
+    """Baseline cells are `<arch>__<shape>__<mesh>.json`; hillclimb variants
+    carry an extra `__<tag>` suffix and are excluded from the baseline table
+    unless `include_tagged` (they land in §Perf instead)."""
+    cells = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        parts = f.stem.split("__")
+        tag = parts[3] if len(parts) > 3 else ""
+        if tag and not include_tagged:
+            continue
+        r = json.loads(f.read_text())
+        r["tag"] = tag
+        if mesh and r.get("mesh") != mesh:
+            continue
+        cells.append(r)
+    cells.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                              if r["shape"] in SHAPE_ORDER else 9,
+                              r["mesh"], r.get("tag", "")))
+    return cells
+
+
+def mfu_bound(r) -> float:
+    """Fraction of chip peak the cell could reach if the step ran at its
+    dominant roofline term: useful_time / bound_time."""
+    rf = r["roofline"]
+    bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+    useful = rf["model_flops"] / PEAK_FLOPS
+    return useful / bound if bound > 0 else 0.0
+
+
+def summarize(r) -> dict:
+    rf = r["roofline"]
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "tag": r.get("tag", ""),
+        "compute_ms": rf["compute_s"] * 1e3,
+        "memory_ms": rf["memory_s"] * 1e3,
+        "collective_ms": rf["collective_s"] * 1e3,
+        "bottleneck": rf["bottleneck"],
+        "mfu_bound": mfu_bound(r),
+        "useful_flops_frac": rf["useful_flops_frac"],
+        "args_gib": (r["memory"]["argument_size_in_bytes"] or 0) / 2 ** 30,
+        "compile_s": r.get("compile_s", 0),
+    }
+
+
+def markdown_table(mesh="single") -> str:
+    rows = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+            "bottleneck | MFU bound | useful-FLOPs | args GiB/dev |",
+            "|---|---|---:|---:|---:|---|---:|---:|---:|"]
+    for r in load_cells(mesh):
+        if r["status"] == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"SKIP ({r['skip_reason'][:40]}…) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"ERROR | — | — | — |")
+            continue
+        s = summarize(r)
+        rows.append(
+            f"| {s['arch']} | {s['shape']} | {s['compute_ms']:.1f} | "
+            f"{s['memory_ms']:.1f} | {s['collective_ms']:.1f} | "
+            f"**{s['bottleneck']}** | {s['mfu_bound']:.3f} | "
+            f"{s['useful_flops_frac']:.2f} | {s['args_gib']:.2f} |")
+    return "\n".join(rows)
+
+
+def run(csv: bool = True) -> dict:
+    cells = load_cells()
+    ok = [c for c in cells if c["status"] == "ok"]
+    skip = [c for c in cells if c["status"] == "skip"]
+    err = [c for c in cells if c["status"] not in ("ok", "skip")]
+    out = {"n_ok": len(ok), "n_skip": len(skip), "n_err": len(err)}
+    if csv:
+        for r in ok:
+            s = summarize(r)
+            cell = f"{s['arch']}/{s['shape']}/{s['mesh']}"
+            if s["tag"]:
+                cell += f"+{s['tag']}"
+            print(f"roofline/{cell},"
+                  f"{s['compile_s']*1e6:.0f},"
+                  f"cmp={s['compute_ms']:.1f}ms;mem={s['memory_ms']:.1f}ms;"
+                  f"col={s['collective_ms']:.1f}ms;bot={s['bottleneck']};"
+                  f"mfu_bound={s['mfu_bound']:.3f}")
+        for r in skip:
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0,SKIP")
+        for r in err:
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0,ERROR")
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    print()
+    print(markdown_table("single"))

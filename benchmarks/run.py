@@ -1,0 +1,39 @@
+"""Benchmark harness entry point — one function per paper table/figure plus
+the roofline report.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src:. python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from benchmarks import fig4_trine          # paper Fig. 4
+from benchmarks import fig6_crosslight     # paper Fig. 6
+from benchmarks import collectives_bench   # Layer-B collective schedules
+from benchmarks import roofline            # §Roofline report
+from benchmarks import photonic_mac_bench  # kernel microbench
+
+
+def main() -> None:
+    print("# fig4: TRINE vs SPACX/SPRINT/Tree (paper Fig. 4)")
+    fig4_trine.run()
+    print("# fig6: CrossLight vs 2.5D-Elec vs 2.5D-SiPh (paper Fig. 6)")
+    fig6_crosslight.run()
+    print("# collective schedules: flat vs TRINE-hierarchical vs +int8")
+    collectives_bench.run()
+    print("# photonic-MAC kernel microbenchmark")
+    photonic_mac_bench.run()
+    print("# roofline (from dry-run artifacts)")
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Continuous-batching serving demo: ragged requests stream through a fixed
+pool of cache slots (vLLM-style iteration-level scheduling) — the serving
+counterpart of the paper's bandwidth-matching argument: keep the provisioned
+lanes (batch slots) busy under ragged load.
+
+  PYTHONPATH=src python examples/continuous_batching.py --arch yi-6b
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs as C
+from repro.models import model as M
+from repro.serve.engine import ContinuousBatcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = C.get_reduced(args.arch)
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    eng = ContinuousBatcher(cfg, params, n_slots=args.slots,
+                            max_len=args.max_len)
+
+    rng = np.random.default_rng(0)
+    total_new = 0
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        max_new = int(rng.integers(4, 16))
+        prompt = list(rng.integers(2, cfg.vocab, size=plen))
+        eng.submit(prompt, max_new)
+        total_new += max_new
+
+    t0 = time.perf_counter()
+    finished = eng.run()
+    dt = time.perf_counter() - t0
+    print(f"{len(finished)} requests, {total_new} new tokens through "
+          f"{args.slots} slots in {dt:.2f}s ({total_new/dt:.0f} tok/s incl. "
+          f"compiles)")
+    for r in finished[:4]:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Quickstart: the paper in five minutes on one CPU.
+
+1. Evaluate the TRINE photonic interposer against SPRINT/SPACX/Tree (Fig. 4).
+2. Evaluate 2.5D-CrossLight vs monolithic / electrical interposer (Fig. 6).
+3. Run one training step of an assigned architecture (reduced scale) with the
+   photonic-MAC (broadcast-and-weight) numerics enabled.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from repro.core import (
+    CNN_WORKLOADS, NetworkParams, choose_subnetworks, crosslight_25d_siph,
+    evaluate_accelerator, evaluate_network, monolithic_crosslight,
+    sprint_bus, tree_network, trine_network,
+)
+from repro import configs as C
+from repro.models import model as M
+
+
+def photonic_network_demo():
+    print("=" * 70)
+    print("TRINE photonic interposer (paper Sec. IV)")
+    p = NetworkParams()
+    print(f"  bandwidth matching: memory {p.mem_bw_bytes_per_s/1e9:.0f} GB/s, "
+          f"waveguide {p.n_lambda * p.modulation_rate_bps/8e9:.0f} GB/s "
+          f"-> K* = {choose_subnetworks(p)} subnetworks (paper: 8)")
+    trine = trine_network(p)
+    tree = tree_network(p)
+    print(f"  TRINE: {trine.n_stages} MZI stages, "
+          f"{trine.worst_path_loss_db:.1f} dB worst path "
+          f"(Tree: {tree.n_stages} stages, {tree.worst_path_loss_db:.1f} dB)")
+    wl = CNN_WORKLOADS["ResNet18"]()
+    t = wl.traffic()
+    for net in (sprint_bus(p), tree, trine):
+        r = evaluate_network(net, t)
+        print(f"  {net.name:10s} ResNet18 traffic: {r.latency_s*1e3:7.3f} ms, "
+              f"{r.energy_j*1e3:6.3f} mJ, {r.energy_per_bit_j*1e12:6.2f} pJ/bit")
+
+
+def accelerator_demo():
+    print("=" * 70)
+    print("2.5D-CrossLight (paper Sec. V)")
+    mono = monolithic_crosslight()
+    siph = crosslight_25d_siph()
+    for wl_name in ("VGG16", "LeNet5"):
+        wl = CNN_WORKLOADS[wl_name]()
+        rm = evaluate_accelerator(mono, wl)
+        rs = evaluate_accelerator(siph, wl)
+        print(f"  {wl_name:8s}: monolithic {rm.latency_s*1e3:8.3f} ms "
+              f"-> 2.5D-SiPh {rs.latency_s*1e3:8.3f} ms "
+              f"({rm.latency_s/rs.latency_s:4.1f}x)  EPB "
+              f"{rm.epb_j*1e12:5.2f} -> {rs.epb_j*1e12:5.2f} pJ/bit")
+
+
+def photonic_mac_training_demo():
+    print("=" * 70)
+    print("Training with photonic-MAC numerics (broadcast-and-weight QAT)")
+    cfg = dataclasses.replace(C.get_reduced("yi_6b"),
+                              use_photonic_mac=True, photonic_bits=8)
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (2, 64), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (2, 64), 0, cfg.vocab)}
+
+    @jax.jit
+    def step(p):
+        (loss, _), g = jax.value_and_grad(
+            lambda q: M.loss_fn(cfg, q, batch), has_aux=True)(p)
+        return loss, jax.tree.map(lambda a, b: a - 5e-2 * b, p, g)
+
+    for i in range(5):
+        loss, params = step(params)
+        print(f"  step {i}: loss = {float(loss):.4f}  "
+              f"(8-bit MR weight banks, f32 photodetector accumulation)")
+
+
+if __name__ == "__main__":
+    photonic_network_demo()
+    accelerator_demo()
+    photonic_mac_training_demo()

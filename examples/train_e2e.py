@@ -1,0 +1,71 @@
+"""End-to-end training driver: train a ~100M-parameter dense LM for a few
+hundred steps with the full production stack — synthetic pipeline with
+prefetch, AdamW, atomic checkpointing, failure injection + auto-resume.
+
+  PYTHONPATH=src python examples/train_e2e.py [--steps 300] [--fail-at 150]
+
+On this CPU container a ~100M model at short sequence length runs a few
+steps/minute; pass --tiny for a fast demonstration (default --tiny for CI).
+"""
+
+import argparse
+import dataclasses
+
+from repro.data.pipeline import DataConfig
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptConfig
+from repro.runtime.trainer import Trainer, TrainerConfig, run_with_restarts
+
+# ~100M-parameter llama-style config (d=768, 12L, vocab 32k ≈ 110M params)
+LM_100M = ModelConfig(
+    name="lm-100m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab=32000, rope_theta=1e4, loss_chunk=128,
+    dtype="float32", remat="none",
+)
+
+LM_TINY = dataclasses.replace(
+    LM_100M, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=256, vocab=1024, name="lm-tiny")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--fail-at", type=int, default=0,
+                    help="inject a node failure at this step (0=off); the "
+                         "supervisor restarts from the latest checkpoint")
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--full-100m", dest="tiny", action="store_false")
+    ap.add_argument("--ckpt", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = LM_TINY if args.tiny else LM_100M
+    print(f"training {cfg.name}: ~{cfg.param_count()/1e6:.0f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    def make():
+        return Trainer(
+            cfg,
+            OptConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps),
+            DataConfig(global_batch=args.batch, seq_len=args.seq),
+            TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=20, log_every=10),
+        )
+
+    if args.fail_at:
+        print(f"(failure will be injected at step {args.fail_at}; "
+              f"watch the auto-resume)")
+        tr = run_with_restarts(make, args.steps, fail_at=(args.fail_at,))
+        out = {"last_loss": tr.history[-1]["loss"] if tr.history else None}
+    else:
+        out = make().run(args.steps)
+    print("done:", out)
+    first = None
+    import json
+    print("loss trajectory proves optimization:",)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: silicon-photonic 2.5D interposer networks (TRINE + 2.5D-CrossLight)
+reproduced as (A) an analytical photonic model and (B) a TPU-scale JAX
+training/serving framework embodying the paper's communication insights."""
+__version__ = "1.0.0"

@@ -1,0 +1,57 @@
+"""Asynchronous checkpointing: snapshot-to-host synchronously (cheap —
+device_get of the sharded state), write + fsync + rename in a background
+thread so the train loop never blocks on disk.  Same on-disk format and
+atomicity guarantees as `store.save`; `store.restore` reads both.
+
+At 1000-node scale the write time of a multi-TB checkpoint exceeds a train
+step by orders of magnitude — async checkpointing is what makes frequent
+(low-RPO) checkpoints affordable.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as _fut
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+
+
+class AsyncCheckpointer:
+    """One background writer; `save()` returns immediately after the host
+    snapshot.  A second save while a write is in flight blocks until the
+    previous write lands (ordering guarantee — checkpoints commit in step
+    order)."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._pool = _fut.ThreadPoolExecutor(max_workers=1,
+                                             thread_name_prefix="ckpt")
+        self._pending: Optional[_fut.Future] = None
+        self._lock = threading.Lock()
+
+    def save(self, step: int, tree: Any) -> _fut.Future:
+        # synchronous host snapshot: the state can be donated/mutated the
+        # moment this returns
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()   # commit order
+            self._pending = self._pool.submit(
+                store.save, self.directory, step, host_tree, self.keep)
+            return self._pending
+
+    def wait(self):
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()
+                self._pending = None
+
+    def close(self):
+        self.wait()
+        self._pool.shutdown(wait=True)

@@ -1,0 +1,106 @@
+"""Fault-tolerant checkpointing (no orbax — built from scratch).
+
+  * step-atomic: write to `step_XXXX.tmp/`, fsync, rename — a crash mid-write
+    never corrupts the latest checkpoint,
+  * content-verified: per-leaf SHA1 manifest checked on restore,
+  * topology-elastic: leaves are stored as FULL logical arrays (gathered from
+    whatever sharding they had), so a checkpoint taken on N devices restores
+    onto any M-device mesh — restore just applies the new shardings
+    (`device_put` with NamedSharding).  This is the elastic-scaling path:
+    lose a pod, re-mesh, restore, continue.
+  * retention: keep the newest `keep` checkpoints.
+
+On a multi-host deployment each host would write its addressable shards and
+the manifest would key on (leaf, shard); the single-host container collapses
+that to full arrays — interface kept identical.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> list:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in leaves]
+
+
+def save(directory: str | Path, step: int, tree: Any, keep: int = 3) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    manifest = {"step": step, "leaves": {}}
+    for i, (name, leaf) in enumerate(_leaf_paths(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        fn = f"leaf_{i:05d}.npy"
+        np.save(tmp / fn, arr)
+        digest = hashlib.sha1((tmp / fn).read_bytes()).hexdigest()
+        manifest["leaves"][name] = {
+            "file": fn, "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "sha1": digest,
+        }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    dirfd = os.open(tmp, os.O_RDONLY)
+    try:
+        os.fsync(dirfd)
+    finally:
+        os.close(dirfd)
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    # retention
+    ckpts = sorted(d for d in directory.iterdir()
+                   if d.is_dir() and d.name.startswith("step_")
+                   and not d.name.endswith(".tmp"))
+    for old in ckpts[:-keep]:
+        shutil.rmtree(old)
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(d.name.split("_")[1]) for d in directory.iterdir()
+             if d.is_dir() and d.name.startswith("step_")
+             and not d.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str | Path, step: int, like: Any,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of `like`; apply `shardings` (same pytree
+    structure of NamedSharding / None) — the elastic re-shard point."""
+    ck = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((ck / "manifest.json").read_text())
+    names = [n for n, _ in _leaf_paths(like)]
+    assert set(names) == set(manifest["leaves"].keys()), (
+        "checkpoint/model structure mismatch")
+
+    shard_leaves = (jax.tree.leaves(shardings,
+                                    is_leaf=lambda x: x is None or hasattr(x, "spec"))
+                    if shardings is not None else [None] * len(names))
+    out_leaves = []
+    for (name, _), sh in zip(_leaf_paths(like), shard_leaves):
+        meta = manifest["leaves"][name]
+        raw = (ck / meta["file"]).read_bytes()
+        if hashlib.sha1(raw).hexdigest() != meta["sha1"]:
+            raise IOError(f"checkpoint corruption in {name}")
+        arr = np.load(ck / meta["file"])
+        out_leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.numpy.asarray(arr))
+    return jax.tree.unflatten(jax.tree.structure(like), out_leaves)

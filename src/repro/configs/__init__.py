@@ -1,0 +1,120 @@
+"""Architecture registry: one module per assigned architecture.
+
+`get(arch_id)` -> ModelConfig (full published config)
+`get_reduced(arch_id)` -> CPU-smoke-scale config of the same family
+`SHAPES` -> the four assigned input-shape cells
+`input_specs(cfg, shape)` -> ShapeDtypeStruct stand-ins for every model input
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "deepseek_67b",
+    "yi_6b",
+    "gemma3_27b",
+    "yi_34b",
+    "grok1_314b",
+    "mixtral_8x7b",
+    "xlstm_350m",
+    "qwen2_vl_72b",
+    "zamba2_1p2b",
+    "seamless_m4t_medium",
+]
+
+# assignment-normalized aliases (--arch deepseek-67b etc.)
+ALIASES = {a.replace("_", "-").replace("-1p2b", "-1.2b"): a for a in ARCH_IDS}
+ALIASES.update({a: a for a in ARCH_IDS})
+ALIASES["grok-1-314b"] = "grok1_314b"   # assignment spelling
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode | long_decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "long_decode"),
+}
+
+
+def get(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ALIASES[arch]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return get(arch).reduced()
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if supported, else the skip reason (recorded in EXPERIMENTS.md)."""
+    if shape.kind == "long_decode":
+        sub_quadratic = (
+            cfg.family in ("ssm", "hybrid")
+            or cfg.attn_pattern in ("sliding", "local_global")
+        )
+        if not sub_quadratic:
+            return ("pure full-attention arch: long_500k requires "
+                    "sub-quadratic attention (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, *, batch_override=None):
+    """ShapeDtypeStruct stand-ins for every input of the lowered step
+    (weak-type-correct, shardable, no device allocation)."""
+    from repro.models import model as M
+
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), i32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok(b, s), "labels": tok(b, s)}
+        if cfg.mrope:
+            batch["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        if cfg.frontend == "vision":
+            batch["pixel_embeds"] = jax.ShapeDtypeStruct(
+                (b, 256, cfg.d_model), jnp.bfloat16)
+        if cfg.encoder_layers:
+            batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, max(1, s // 4), cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": tok(b, s)}
+        if cfg.mrope:
+            batch["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        if cfg.encoder_layers:
+            batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, max(1, s // 4), cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+
+    # decode / long_decode: one new token against a cache of length s
+    cache, _ = M.init_cache_abstract(cfg, b, s)
+    spec = {
+        "cache": cache,
+        "tokens": tok(b, 1),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+    if cfg.encoder_layers:
+        spec["enc_out"] = jax.ShapeDtypeStruct(
+            (b, max(1, s // 4), cfg.d_model), jnp.bfloat16)
+    return spec

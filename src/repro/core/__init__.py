@@ -1,0 +1,38 @@
+"""Layer A: analytical silicon-photonic 2.5D interposer + accelerator models
+(the paper's own evaluation methodology, reproduced in JAX/NumPy)."""
+
+from repro.core.devices import (
+    DeviceLibrary,
+    DEFAULT_DEVICES,
+    laser_electrical_power_w,
+    db_to_linear,
+    linear_to_db,
+)
+from repro.core.topology import (
+    NetworkParams,
+    NetworkModel,
+    sprint_bus,
+    spacx_bus,
+    tree_network,
+    trine_network,
+    electrical_mesh,
+    TOPOLOGIES,
+)
+from repro.core.power import Traffic, NetworkReport, evaluate_network
+from repro.core.planner import (
+    choose_subnetworks,
+    plan_gateway_activation,
+    plan_collective_channels,
+)
+from repro.core.workloads import Workload, Layer, CNN_WORKLOADS, gemm_workload
+from repro.core.accelerator import (
+    AcceleratorConfig,
+    ChipletSpec,
+    AccelReport,
+    monolithic_crosslight,
+    crosslight_25d_siph,
+    crosslight_25d_elec,
+    evaluate_accelerator,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,122 @@
+"""Network power / latency / energy evaluation (paper Fig. 4 methodology).
+
+Given a `NetworkModel` (topology) and a traffic summary (bytes moved, number
+of transfers), produce the three quantities the paper reports: network power
+(W), total network latency (s), and energy (J) — plus energy-per-bit.
+
+Power breakdown (photonic):
+  laser     — sized by worst-case path loss (exponential in dB loss; the
+              paper's core argument for stage-minimal topologies)
+  trimming  — static thermal tuning, ∝ total MR count (TRINE pays more here
+              than SPACX/Tree; paper acknowledges this)
+  switch    — MZI bias/driver static power
+  dynamic   — modulator driver + SerDes + receiver energy per bit
+
+Electrical: per-bit link+router energy, router static power.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.devices import DeviceLibrary, DEFAULT_DEVICES, laser_electrical_power_w
+from repro.core.topology import NetworkModel
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """Aggregate interposer traffic of one workload (from workloads.py)."""
+
+    bytes_read: float       # memory -> compute (SWMR)
+    bytes_written: float    # compute -> memory (SWSR)
+    n_transfers: int        # distinct layer-level transfer events
+
+    @property
+    def total_bytes(self) -> float:
+        return self.bytes_read + self.bytes_written
+
+    @property
+    def total_bits(self) -> float:
+        return 8.0 * self.total_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkReport:
+    name: str
+    power_w: float          # static + average dynamic power
+    latency_s: float
+    energy_j: float
+    energy_per_bit_j: float
+    laser_power_w: float
+    trimming_power_w: float
+
+
+def evaluate_network(
+    net: NetworkModel,
+    traffic: Traffic,
+    devices: Optional[DeviceLibrary] = None,
+    active_fraction: float = 1.0,
+) -> NetworkReport:
+    """Evaluate one topology under one workload's traffic.
+
+    `active_fraction` models 2.5D-CrossLight's PCMC gateway adaptation: only
+    that fraction of wavelengths/gateways is lit (laser + trimming scale
+    down); bandwidth scales with it too.
+    """
+    d = devices or DEFAULT_DEVICES
+
+    if net.is_electrical:
+        # latency: serialization at effective BW + per-transfer hop latency
+        ser = traffic.total_bits / net.effective_bw_bps
+        lat = ser + traffic.n_transfers * net.per_transfer_s
+        dyn_e = traffic.total_bits * d.elec.energy_per_bit_j * net.avg_hops
+        static_p = net.n_routers * d.elec.router_power_w
+        energy = dyn_e + static_p * lat
+        return NetworkReport(
+            name=net.name,
+            power_w=float(static_p + dyn_e / max(lat, 1e-30)),
+            latency_s=float(lat),
+            energy_j=float(energy),
+            energy_per_bit_j=float(energy / max(traffic.total_bits, 1.0)),
+            laser_power_w=0.0,
+            trimming_power_w=0.0,
+        )
+
+    frac = float(np.clip(active_fraction, 1e-3, 1.0))
+    n_lambda_active = max(1, int(round(net.n_wavelengths * frac)))
+
+    n_banks_active = max(1, int(round(net.n_laser_banks * frac)))
+    laser_p = float(
+        laser_electrical_power_w(
+            net.worst_path_loss_db, n_lambda_active, d, n_banks=n_banks_active
+        )
+    )
+    trimming_p = net.n_mr * d.mr.tuning_power_w * frac
+    switch_p = net.n_mzi * d.mzi.static_power_w * frac
+    static_p = laser_p + trimming_p + switch_p
+
+    bw = net.effective_bw_bps * frac
+    ser = traffic.total_bits / bw
+    lat = ser + traffic.n_transfers * net.per_transfer_s
+
+    per_bit = (
+        d.driver.energy_per_bit_j
+        + d.driver.serdes_energy_per_bit_j
+        + d.pd.energy_per_bit_j
+    )
+    dyn_e = traffic.total_bits * per_bit
+    switch_e = traffic.n_transfers * net.n_stages * d.mzi.switch_energy_j
+    energy = static_p * lat + dyn_e + switch_e
+
+    return NetworkReport(
+        name=net.name,
+        power_w=float(static_p + (dyn_e + switch_e) / max(lat, 1e-30)),
+        latency_s=float(lat),
+        energy_j=float(energy),
+        energy_per_bit_j=float(energy / max(traffic.total_bits, 1.0)),
+        laser_power_w=laser_p,
+        trimming_power_w=float(trimming_p),
+    )

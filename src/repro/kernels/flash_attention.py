@@ -1,0 +1,133 @@
+"""Flash-attention forward kernel (Pallas TPU) with GQA and sliding-window
+support — the memory-bound compute hot-spot of every assigned LM architecture.
+
+Online-softmax over KV blocks: grid (batch*q_heads, q_blocks, kv_blocks) with
+kv as the sequential dimension; running (m, l, acc) in VMEM scratch.  GQA is
+handled in the BlockSpec index map (q head h reads kv head h // group) — no
+materialized KV repetition.  Sliding-window / causal masks are applied from
+program ids, and fully-masked KV blocks are skipped by the index map never
+being reached (we rely on masking; block skipping is a TPU-side optimization
+recorded in EXPERIMENTS.md §Perf).
+
+Shapes (already head-split):
+  q (B, Hq, Sq, D) ; k, v (B, Hk, Sk, D) ; out (B, Hq, Sq, D) f32
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BKV = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int, bq: int, bkv: int,
+    n_kv: int, q_offset_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bkv, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bkv)
+
+    # absolute positions: q rows may be offset (decode: queries at the end)
+    q_pos = (qi + q_offset_blocks) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 0)
+    k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    # rows with no valid key yet: keep l/acc at 0 (p underflows to 0 via NEG_INF)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bkv", "q_offset", "interpret"),
+)
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: int = 0, scale: float | None = None,
+    bq: int = DEFAULT_BQ, bkv: int = DEFAULT_BKV, q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    """q (B,Hq,Sq,D); k,v (B,Hk,Sk,D); GQA when Hq > Hk. q_offset: absolute
+    position of q[...,0,:] (for decode with a prefilled KV cache)."""
+    b, hq, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    assert hq % hk == 0, (hq, hk)
+    group = hq // hk
+    bq_ = min(bq, sq)
+    bkv_ = min(bkv, sk)
+    assert sq % bq_ == 0 and sk % bkv_ == 0, (sq, sk, bq_, bkv_)
+    assert q_offset % bq_ == 0, "q_offset must be a multiple of the q block"
+    scale = scale if scale is not None else d ** -0.5
+    n_kv = sk // bkv_
+
+    qr = q.reshape(b * hq, sq, d)
+    kr = k.reshape(b * hk, sk, d)
+    vr = v.reshape(b * hk, sk, d)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        # GQA: query head -> kv head
+        bidx = bh // hq
+        h = bh % hq
+        return (bidx * hk + h // group, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, scale=scale, causal=causal, window=window,
+            bq=bq_, bkv=bkv_, n_kv=n_kv, q_offset_blocks=q_offset // bq_,
+        ),
+        grid=(b * hq, sq // bq_, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq_, d), q_map),
+            pl.BlockSpec((1, bkv_, d), kv_map),
+            pl.BlockSpec((1, bkv_, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, d), jnp.float32),
+            pltpu.VMEM((bq_,), jnp.float32),
+            pltpu.VMEM((bq_,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,109 @@
+"""Photonic MAC kernel — 2.5D-CrossLight's broadcast-and-weight numerics on TPU.
+
+The paper's photonic MAC units (Sec. V) imprint weights onto per-wavelength
+optical amplitudes with MR filters (limited amplitude resolution — the MR
+tuning DAC gives 4..8 bits), multiply noncoherently, and sum partial products
+in balanced photodetectors (analog, effectively full-precision accumulation).
+
+TPU adaptation (DESIGN.md §3): a blocked matmul whose weights are
+**integer-quantized per (bk × bn) tile with a per-tile scale** — each tile is
+one "MR weight bank" whose dynamic range is set by its own tuning — while
+activations stay bf16 and accumulation runs in f32 on the MXU (the
+photodetector analog-sum analog).  Wavelength-parallelism (#WDM λ) maps to the
+K-dimension tile width.
+
+Layout:
+  x        (M, K)   bf16/f32 activations
+  w_q      (K, N)   int8 quantized weights
+  w_scale  (K/bk, N/bn) f32 per-tile scales
+  out      (M, N)   f32
+
+Grid (M/bm, N/bn, K/bk); K is the sequential (arbitrary) dimension with an
+f32 VMEM accumulator. Tile defaults are MXU-aligned (128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _mac_kernel(x_ref, wq_ref, scale_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    # dequantize this weight-bank tile: int levels * per-tile scale
+    w = wq_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def photonic_mac(
+    x: jax.Array,
+    w_q: jax.Array,
+    w_scale: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Quantized-weight matmul: out = x @ (w_q * per-tile scale)."""
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2, (x.shape, w_q.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k},{n}) must tile by ({bm},{bn},{bk})"
+    )
+    assert w_scale.shape == (k // bk, n // bn), w_scale.shape
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_mac_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, w_scale)
+
+
+def quantize_weights(
+    w: jax.Array, bits: int = 8, bk: int = DEFAULT_BK, bn: int = DEFAULT_BN
+):
+    """Per-(bk x bn)-tile symmetric quantization — one scale per MR weight
+    bank, range set by the bank's own max |w| (the MR tuning range)."""
+    k, n = w.shape
+    assert k % bk == 0 and n % bn == 0, (w.shape, bk, bn)
+    tiles = w.reshape(k // bk, bk, n // bn, bn)
+    qmax = 2 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(tiles), axis=(1, 3))  # (k/bk, n/bn)
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    w_q = jnp.clip(
+        jnp.round(tiles / scale[:, None, :, None]), -qmax, qmax
+    ).astype(jnp.int8)
+    return w_q.reshape(k, n), scale.astype(jnp.float32)

@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for every Pallas kernel.  Tests assert_allclose the
+kernels (interpret mode on CPU) against these; ops.py also uses their VJPs
+for the backward pass (kernel-forward / oracle-backward pattern)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def photonic_mac_ref(x, w_q, w_scale, bk: int = 128, bn: int = 128):
+    """Dequantize-then-matmul oracle. w_q (K,N) int8, w_scale (K/bk, N/bn)."""
+    k, n = w_q.shape
+    scale_full = jnp.repeat(jnp.repeat(w_scale, bk, axis=0), bn, axis=1)
+    w = w_q.astype(jnp.float32) * scale_full
+    return jnp.dot(x.astype(jnp.float32), w, precision=jax.lax.Precision.HIGHEST)
+
+
+def dequantize_ref(w_q, w_scale, bk: int = 128, bn: int = 128):
+    scale_full = jnp.repeat(jnp.repeat(w_scale, bk, axis=0), bn, axis=1)
+    return w_q.astype(jnp.float32) * scale_full
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None, q_offset=0):
+    """Naive softmax attention with GQA + causal/sliding-window masks.
+    q (B,Hq,Sq,D); k,v (B,Hk,Sk,D)."""
+    b, hq, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    group = hq // hk
+    scale = scale if scale is not None else d ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+def ssm_scan_chunked_ref(x, a, b, c, chunk: int = 128):
+    """Chunked (SSD block-decomposition) scan — the same math the Pallas
+    kernel implements, in pure jnp.  This is the production XLA fallback and
+    the dry-run path: trips drop L -> L/chunk and the per-step rank-1 updates
+    become MXU-shaped matmuls (ch x ch x {N,P}).  Validated against the
+    sequential oracle `ssm_scan_ref` (test_kernels.py).
+
+    x (BH,L,P), a (BH,L), b/c (BH,L,N) -> y (BH,L,P)."""
+    bh, l, p = x.shape
+    n = b.shape[-1]
+    ch = min(chunk, l)
+    if l % ch:  # non-tileable tail -> sequential oracle
+        return ssm_scan_ref(x, a, b, c)
+    nc = l // ch
+    # decay math stays f32 (log/cumsum/exp); the big einsum operands run in
+    # the input dtype (bf16 from the model -> half the HBM traffic) with f32
+    # MXU accumulation — §Perf zamba2 iteration 3.
+    dt = x.dtype if x.dtype == jnp.bfloat16 else jnp.float32
+    f32 = jnp.float32
+    xf = x.reshape(bh, nc, ch, p).astype(dt)
+    af = a.reshape(bh, nc, ch).astype(f32)
+    bf = b.reshape(bh, nc, ch, n).astype(dt)
+    cf = c.reshape(bh, nc, ch, n).astype(dt)
+
+    log_a = jnp.log(jnp.maximum(af, 1e-37))
+    cum_log = jnp.cumsum(log_a, axis=-1)                    # (bh,nc,ch)
+
+    # intra-chunk: decay(s,t) = exp(cum_t - cum_s) for s <= t (log-space segsum)
+    dlog = cum_log[..., None, :] - cum_log[..., :, None]    # (bh,nc,s,t)
+    mask = jnp.arange(ch)[:, None] <= jnp.arange(ch)[None, :]
+    m = jnp.where(mask, jnp.exp(jnp.clip(dlog, -80.0, 0.0)), 0.0)
+    g = jnp.einsum("zksn,zktn->zkst", bf, cf,
+                   preferred_element_type=f32)              # gram B C^T
+    y_intra = jnp.einsum("zkst,zksp->zktp", (m * g).astype(dt), xf,
+                         preferred_element_type=f32)
+
+    # per-chunk state contribution and decay
+    cum = jnp.exp(cum_log)
+    wgt = jnp.exp(jnp.clip(cum_log[..., -1:] - cum_log, -80.0, 0.0))
+    s_chunk = jnp.einsum("zksp,zksn->zkpn", xf * wgt[..., None].astype(dt), bf,
+                         preferred_element_type=f32)
+    a_chunk = cum[..., -1]                                  # (bh,nc)
+
+    # inter-chunk scan (nc trips): carry-in state per chunk (f32 carry)
+    def step(s, inp):
+        s_c, a_c = inp
+        return a_c[:, None, None] * s + s_c, s
+    s0 = jnp.zeros((bh, p, n), f32)
+    _, s_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    s_in = jnp.moveaxis(s_in, 0, 1)                         # (bh,nc,p,n)
+
+    y_carry = jnp.einsum("zktn,zkpn->zktp", (cf.astype(f32) * cum[..., None]).astype(dt),
+                         s_in.astype(dt), preferred_element_type=f32)
+    return (y_carry + y_intra).reshape(bh, l, p)
+
+
+def ssm_scan_ref(x, a, b, c):
+    """Naive sequential scan oracle.  x (BH,L,P), a (BH,L), b/c (BH,L,N)."""
+    bh, l, p = x.shape
+    n = b.shape[-1]
+
+    def step(s, inp):
+        xt, at, bt, ct = inp
+        s = at[:, None, None] * s + jnp.einsum("zp,zn->zpn", xt, bt)
+        y = jnp.einsum("zpn,zn->zp", s, ct)
+        return s, y
+
+    s0 = jnp.zeros((bh, p, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(c, 1, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1)  # (BH, L, P)

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract the roofline terms.
+
+  single-pod: (16, 16)    ("data", "model")        256 chips
+  multi-pod : (2, 16, 16) ("pod", "data", "model") 512 chips
+
+For each cell we lower the REAL step function (train_step with AdamW update,
+prefill, or serve_step) against ShapeDtypeStruct inputs, compile, and record:
+memory_analysis (fits?), cost_analysis (FLOPs/bytes), and the collective
+schedule parsed from the partitioned HLO.  Artifacts land in
+benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.parallel import sharding as S
+from repro.parallel import actx
+from repro.parallel import wire
+from repro.runtime.trainer import make_train_step
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def model_flops_per_device(cfg: ModelConfig, shape, n_devices: int) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for training;
+    2*N*D for inference steps (forward only).  Per-device."""
+    n = cfg.active_param_count() if cfg.n_experts else cfg.param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        total = 6.0 * n * d
+    elif shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        total = 2.0 * n * d
+    else:  # decode: one token per sequence
+        d = shape.global_batch * 1
+        total = 2.0 * n * d
+    return total / n_devices
+
+
+def _lower_cell(cfg: ModelConfig, shape, mesh, strategy=None, opt_dtype=None):
+    """Returns the lowered step function for the cell."""
+    strategy = strategy or cfg.parallel_strategy
+    rules = S.rules_for(cfg, mesh, strategy)
+    specs = C.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = adamw.OptConfig(
+            state_dtype=opt_dtype or (
+                "bfloat16" if "pod" in cfg.fsdp_axes else "float32"))
+        params_shape, param_specs = M.init_abstract(cfg)
+        pw = None
+        if cfg.wire_bits:
+            pw = wire.make_param_wire(cfg, mesh, rules, param_specs)
+        step_fn = make_train_step(cfg, opt, param_wire=pw)
+        state_shape = jax.eval_shape(
+            lambda p: adamw.init_state(opt, p), params_shape)
+        state_sh = S.enforce_divisibility(
+            S.tree_shardings(mesh, adamw.state_specs(param_specs), rules),
+            state_shape)
+        batch_sh = S.train_batch_shardings(cfg, mesh, specs["batch"], strategy)
+        return jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                       donate_argnums=(0,)).lower(state_shape, specs["batch"])
+
+    params_shape, param_specs = M.init_abstract(cfg)
+    param_sh = S.enforce_divisibility(
+        S.tree_shardings(mesh, param_specs, rules), params_shape)
+
+    if shape.kind == "prefill":
+        def pf(params, batch):
+            return M.prefill(cfg, params, batch, cache_len=shape.seq_len + 1)
+        batch_sh = S.train_batch_shardings(cfg, mesh, specs["batch"], strategy)
+        return jax.jit(pf, in_shardings=(param_sh, batch_sh)).lower(
+            params_shape, specs["batch"])
+
+    # decode / long_decode
+    cache_shape, cache_specs = M.init_cache_abstract(cfg, shape.global_batch,
+                                                      shape.seq_len)
+    cache_sh = S.enforce_divisibility(
+        S.cache_shardings(cfg, mesh, cache_specs, shape.global_batch, rules),
+        cache_shape)
+    tok_sh = S.train_batch_shardings(cfg, mesh, {"t": specs["tokens"]})["t"]
+    ps = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    if cfg.encoder_layers:
+        def sv(params, cache, tokens, pos, enc_out):
+            return M.serve_step(cfg, params, cache, tokens, pos, enc_out=enc_out)
+        enc_sh = S.train_batch_shardings(cfg, mesh, {"e": specs["enc_out"]})["e"]
+        return jax.jit(sv, in_shardings=(param_sh, cache_sh, tok_sh, ps, enc_sh),
+                       donate_argnums=(1,)).lower(
+            params_shape, specs["cache"], specs["tokens"], specs["pos"],
+            specs["enc_out"])
+
+    def sv(params, cache, tokens, pos):
+        return M.serve_step(cfg, params, cache, tokens, pos)
+    return jax.jit(sv, in_shardings=(param_sh, cache_sh, tok_sh, ps),
+                   donate_argnums=(1,)).lower(
+        params_shape, specs["cache"], specs["tokens"], specs["pos"])
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose=True,
+             strategy=None, remat=None, opt_dtype=None, wire_bits=None,
+             moe_dispatch=None) -> dict:
+    cfg = C.get(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if wire_bits is not None:
+        cfg = dataclasses.replace(cfg, wire_bits=wire_bits)
+    if moe_dispatch:
+        cfg = dataclasses.replace(cfg, moe_dispatch=moe_dispatch)
+    shape = C.SHAPES[shape_name]
+    skip = C.supports_shape(cfg, shape)
+    out = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_kind,
+           "strategy": strategy or cfg.parallel_strategy,
+           "remat": cfg.remat, "opt_dtype": opt_dtype,
+           "wire_bits": cfg.wire_bits,
+           "status": "skip", "skip_reason": skip}
+    if skip:
+        if verbose:
+            print(f"[skip] {arch} x {shape_name}: {skip}")
+        return out
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.perf_counter()
+    strat = strategy or cfg.parallel_strategy
+    dp = S.batch_axes(mesh, shape.global_batch, strat)
+    with mesh, actx.activation_sharding(mesh, dp, seq_tp=(strat == "seq_tp"),
+                                        wire_ok=(strat == "fsdp_all")):
+        lowered = _lower_cell(cfg, shape, mesh, strategy, opt_dtype=opt_dtype)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    hlo = compiled.as_text()
+    stats = H.analyze_hlo(hlo, n_dev)
+    mflops = model_flops_per_device(cfg, shape, n_dev)
+
+    mem_fields = {}
+    for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_fields[f] = getattr(mem, f, None)
+    io_bytes = (mem_fields.get("argument_size_in_bytes") or 0) + \
+               (mem_fields.get("output_size_in_bytes") or 0)
+    terms = H.roofline(stats, cost, mflops, io_bytes=io_bytes)
+
+    out.update({
+        "status": "ok",
+        "n_devices": n_dev,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "memory": mem_fields,
+        "cost_flops": float(cost.get("flops", -1)),
+        "cost_bytes": float(cost.get("bytes accessed", -1)),
+        "hlo_stats": stats.to_json(),
+        "roofline": terms.to_json(),
+    })
+    if verbose:
+        per_dev_gb = (mem_fields.get("argument_size_in_bytes") or 0) / 2**30
+        print(f"[ok] {arch:20s} x {shape_name:12s} x {mesh_kind:6s} "
+              f"args={per_dev_gb:6.2f}GiB/dev "
+              f"compute={terms.compute_s*1e3:8.2f}ms "
+              f"memory={terms.memory_s*1e3:8.2f}ms "
+              f"collective={terms.collective_s*1e3:8.2f}ms "
+              f"-> {terms.bottleneck} (compile {t_compile:.0f}s)")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(C.SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--strategy", default=None,
+                    choices=[None, "tp_fsdp", "fsdp_all", "seq_tp"])
+    ap.add_argument("--remat", default=None,
+                    choices=[None, "none", "full", "dots", "dots_all"])
+    ap.add_argument("--opt-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--wire-bits", default=None, type=int,
+                    help="int8 weight wire format (fsdp_all only)")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=[None, "einsum", "index"])
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--continue-on-error", action="store_true", default=True)
+    args = ap.parse_args()
+
+    archs = list(C.ALIASES.keys()) if args.all or not args.arch else [args.arch]
+    archs = sorted({C.ALIASES[a] for a in archs})
+    shapes = list(C.SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if (args.mesh == "both" or args.all) else [args.mesh]
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}" + (
+                    f"__{args.tag}" if args.tag else "")
+                try:
+                    res = run_cell(arch, shape, mesh_kind,
+                                   strategy=args.strategy, remat=args.remat,
+                                   opt_dtype=args.opt_dtype,
+                                   wire_bits=args.wire_bits,
+                                   moe_dispatch=args.moe_dispatch)
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[ERROR] {tag}: {type(e).__name__}: {e}")
+                    if not args.continue_on_error:
+                        raise
+                (ARTIFACTS / f"{tag}.json").write_text(json.dumps(res, indent=1))
+    print(f"done; failures={failures}")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,496 @@
+"""Roofline-term extraction from compiled SPMD executables.
+
+`compiled.cost_analysis()` under-counts scanned programs: XLA's HLO cost
+analysis counts a while-loop body ONCE, not times its trip count (verified on
+this container: a 2-layer and an 8-layer lax.scan report identical FLOPs).
+Since every model here scans its layers, we parse the post-partitioning HLO
+text ourselves:
+
+  1. split the module into computations,
+  2. recover each while loop's trip count from the max integer constant in its
+     condition computation (the induction bound),
+  3. propagate call-site multipliers (body= x trip, condition/call/fusion x 1)
+     from ENTRY,
+  4. count dot FLOPs (2 * result_elems * contracted_dim) and collective bytes
+     (ring-weighted by replica-group size) per computation x multiplier.
+
+Wire-dtype correction: the CPU backend's FloatNormalization pass erases bf16
+(verified here: even a bf16 *input* pinned replicated compiles to
+`all-gather(f32 convert(bf16 param))`), and its fusion pass hoists dequants
+ahead of gathers.  The TPU pipeline keeps bf16 collectives native and runs
+CollectiveQuantizer (narrowing converts commute into collectives), so the
+payload that crosses a real ICI link is the NARROW tensor.  We therefore
+resolve each collective operand through one level of
+convert/copy/bitcast/fusion producers: if a producer operand with the SAME
+element count has a narrower dtype, the wire bytes are counted at that width.
+`collective_bytes_raw` keeps the uncorrected number as the cross-check.
+
+Raw cost_analysis numbers are kept in the artifacts as the uncorrected
+cross-check.  Hardware constants (TPU v5e-class target, per assignment):
+197 TFLOP/s bf16/chip ; 819 GB/s HBM ; ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _shape_dims(text: str) -> List[Tuple[str, int]]:
+    """All (dtype, elems) shapes at the start of `text` (handles tuples)."""
+    out = []
+    head = text
+    if head.startswith("("):
+        head = head[:head.index(")")] if ")" in head else head
+    else:
+        sp = head.find(" ")
+        head = head[:sp] if sp > 0 else head
+    for m in _SHAPE_RE.finditer(head):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n))
+        if not text.startswith("("):
+            break
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in _shape_dims(text))
+
+
+def _shape_elems(text: str) -> int:
+    s = _shape_dims(text)
+    return s[0][1] if s else 0
+
+
+def _dims_list(text: str) -> List[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    rhs: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    ops: List[_Op]
+    is_entry: bool = False
+
+
+def _parse_computations(hlo: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            cur = _Comp(name=hdr.group(2), ops=[], is_entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(_Op(m.group(1), m.group(2)))
+    return comps
+
+
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_REFS = re.compile(
+    r"(?:calls=|to_apply=|branch_computations=\{)%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count(cond: _Comp) -> int:
+    """Max integer constant in the loop condition — the induction bound."""
+    best = 1
+    for op in cond.ops:
+        for m in _CONST_RE.finditer(op.rhs):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: Dict[str, _Comp]) -> Dict[str, float]:
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:  # single-computation module
+        return {c: 1.0 for c in comps}
+
+    def visit(name: str, m: float, depth=0):
+        if name not in comps or depth > 32:
+            return
+        mult[name] += m
+        comp = comps[name]
+        for op in comp.ops:
+            wm = _WHILE_RE.search(op.rhs)
+            if wm and " while(" in op.rhs:
+                cond_name, body_name = wm.groups()
+                trip = _trip_count(comps[cond_name]) if cond_name in comps else 1
+                visit(cond_name, m, depth + 1)
+                visit(body_name, m * trip, depth + 1)
+                continue
+            for ref in _CALL_REFS.finditer(op.rhs):
+                sub = ref.group(1)
+                if sub != name:
+                    visit(sub, m, depth + 1)
+            # conditional: branch_computations={%a, %b} — regex catches first;
+            # catch the rest:
+            bm = re.search(r"branch_computations=\{([^}]*)\}", op.rhs)
+            if bm:
+                for nm in bm.group(1).split(","):
+                    nm = nm.strip().lstrip("%")
+                    if nm and nm != name:
+                        visit(nm, m, depth + 1)
+
+    visit(entry.name, 1.0)
+    return mult
+
+
+def _group_size(rhs: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", rhs)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip() != ""]))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", rhs)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float
+    dot_bytes: float             # Σ dot operand+result bytes × multiplier
+    op_result_bytes: float       # Σ ALL result bytes × multiplier (upper bound)
+    collective_bytes: float      # ring-weighted per-device wire bytes
+    collective_op_bytes: Dict[str, float]
+    collective_op_counts: Dict[str, int]
+    max_trip: int
+    collective_dtype_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)    # wire bytes per payload dtype (diagnostics)
+    collective_bytes_raw: float = 0.0   # uncorrected (compiled-HLO dtypes)
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def _operand_names(rhs: str) -> List[str]:
+    args = re.search(r"\(([^)]*)\)", rhs)
+    if not args:
+        return []
+    return [a.strip().lstrip("%") for a in args.group(1).split(",") if a.strip()]
+
+
+_PASSTHROUGH = re.compile(
+    r"(^|\s)(convert|copy|bitcast|fusion|reshape|transpose|slice|dynamic-slice)\(")
+
+# collectives that move data without reducing — narrowing converts commute
+# through these (XLA-TPU CollectiveQuantizer); all-reduce / reduce-scatter
+# payload dtype changes the reduction numerics, so those are never corrected.
+_MOVEMENT_COLLECTIVES = ("all-gather", "all-to-all", "collective-permute")
+
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_CONVERT_RES = re.compile(r"^\s*(\w+)\[([\d,]*)\]\S*\s+convert\(")
+
+
+def _fusion_interior_width(rhs, comps, elems, width):
+    """The CPU backend hides f32<->bf16 convert pairs inside kLoop fusions
+    (`convert_convert_fusion`); the narrow type those converts witness is the
+    dtype a TPU build keeps live.  Scan the called computation for converts
+    over `elems` elements narrower than `width`."""
+    m = _CALLS_RE.search(rhs)
+    if not m or m.group(1) not in comps:
+        return width
+    for op in comps[m.group(1)].ops:
+        cm = _CONVERT_RES.search(op.rhs)
+        if not cm:
+            continue
+        dt, dims = cm.group(1), cm.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if n == elems and _DTYPE_BYTES[dt] < width:
+            width = _DTYPE_BYTES[dt]
+    return width
+
+
+def _producer_narrow_width(op_rhs, shapes, comps, elems, width, depth=3):
+    """Chase convert/fusion/slice producers: a producer operand with at least
+    `elems` elements and a narrower dtype (or a fusion whose interior
+    narrows) means the wire payload is (a slice of) that narrow tensor."""
+    width = _fusion_interior_width(op_rhs, comps, elems, width)
+    frontier = [op_rhs]
+    for _ in range(depth):
+        nxt = []
+        for rhs in frontier:
+            for name in _operand_names(rhs):
+                prod = shapes.get(name)
+                if prod is None:
+                    continue
+                pdims = _shape_dims(prod)
+                if not pdims:
+                    continue
+                pdt, pelems = pdims[0]
+                if pelems >= elems and _DTYPE_BYTES[pdt] < width:
+                    width = _DTYPE_BYTES[pdt]
+                if pelems >= elems and _PASSTHROUGH.search(" " + prod):
+                    width = _fusion_interior_width(prod, comps, elems, width)
+                    nxt.append(prod)
+        frontier = nxt
+    return width
+
+
+def _consumer_narrow_width(coll_name, users, shapes, comps, elems, width,
+                           depth=3):
+    """If every consumer branch of the collective result narrows it through
+    elem-preserving convert/copy chains, the TPU pipeline sinks the convert
+    into the collective (CollectiveQuantizer) — the wire payload is the
+    narrow dtype.  BFS through passthrough consumers (looking inside fusion
+    bodies); any branch that consumes at full width pins the wire wide."""
+    branch_widths = []
+
+    def visit(name, w, d):
+        consumers = users.get(name, ())
+        if not consumers:
+            branch_widths.append(w)   # dead/root result — no wider need
+            return
+        for uname, urhs in consumers:
+            udims = _shape_dims(urhs)
+            if not udims:
+                branch_widths.append(w)
+                continue
+            udt, uelems = udims[0]
+            passthrough = bool(_PASSTHROUGH.search(" " + urhs))
+            inner = _fusion_interior_width(urhs, comps, elems, w)
+            if inner < w:
+                branch_widths.append(inner)               # narrowed in-body
+            elif uelems == elems and passthrough and _DTYPE_BYTES[udt] < w:
+                branch_widths.append(_DTYPE_BYTES[udt])   # narrowed here
+            elif uelems == elems and passthrough and d < depth:
+                visit(uname, w, d + 1)                    # chase onward
+            else:
+                branch_widths.append(w)                   # consumed as-is
+    visit(coll_name, width, 0)
+    return max(branch_widths) if branch_widths else width
+
+
+def _wire_dtype_bytes(op_rhs: str, shapes: Dict[str, str], comps):
+    dims = _shape_dims(op_rhs)
+    if not dims:
+        return 0, 0
+    dt, elems = dims[0]
+    width = _DTYPE_BYTES[dt]
+    return elems, _producer_narrow_width(op_rhs, shapes, comps, elems, width)
+
+
+def analyze_hlo(hlo: str, n_devices: int) -> HloStats:
+    comps = _parse_computations(hlo)
+    mult = _multipliers(comps)
+    shapes: Dict[str, str] = {}
+    users: Dict[str, List[str]] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            shapes[op.name] = op.rhs
+    for comp in comps.values():
+        for op in comp.ops:
+            for a in _operand_names(op.rhs):
+                if a in shapes:
+                    users.setdefault(a, []).append((op.name, op.rhs))
+
+    dot_flops = 0.0
+    dot_bytes = 0.0
+    result_bytes = 0.0
+    coll_bytes: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    coll_dtype: Dict[str, float] = {}
+    total_coll = 0.0
+    total_coll_raw = 0.0
+    max_trip = 1
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 1.0)
+        if m <= 0:
+            continue
+        max_trip = max(max_trip, int(m))
+        for op in comp.ops:
+            rhs = op.rhs
+            result_bytes += _shape_bytes(rhs) * m
+
+            if " dot(" in rhs or rhs.startswith("dot("):
+                out_elems = _shape_elems(rhs)
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                contracted = 1
+                operand_bytes = 0.0
+                args = re.search(r"\(([^)]*)\)", rhs)
+                if args:
+                    names = [a.strip().lstrip("%") for a in args.group(1).split(",")]
+                    # operand bytes at their TRUE dtype: the CPU backend wraps
+                    # bf16 dot operands in f32 convert-pair fusions (see
+                    # module docstring); a TPU build reads bf16 from HBM.
+                    for a in names:
+                        elems, w = _wire_dtype_bytes(shapes.get(a, ""), shapes,
+                                                     comps)
+                        operand_bytes += elems * w
+                    if cm and names:
+                        lhs_dims = _dims_list(shapes.get(names[0], ""))
+                        for d in cm.group(1).split(","):
+                            if d and int(d) < len(lhs_dims):
+                                contracted *= lhs_dims[int(d)]
+                dot_flops += 2.0 * out_elems * contracted * m
+                # result bytes at the dtype that actually reaches HBM: the
+                # f32 MXU accumulator is cast to bf16 in the consumer fusion
+                # before the write (consumer-narrowing, methodology note 2)
+                res_w = _DTYPE_BYTES.get(
+                    _shape_dims(rhs)[0][0], 4) if _shape_dims(rhs) else 4
+                res_w = _consumer_narrow_width(op.name, users, shapes, comps,
+                                               out_elems, res_w)
+                dot_bytes += (operand_bytes + out_elems * res_w) * m
+                continue
+
+            kind = None
+            for c in _COLLECTIVES:
+                if re.search(rf"(^|\s){c}(-start)?\(", rhs):
+                    kind = c
+                    break
+            if kind is None:
+                continue
+            movement = kind in _MOVEMENT_COLLECTIVES
+            operand_bytes = 0
+            operand_bytes_c = 0.0
+            res_dims = _shape_dims(rhs)
+            res_elems = res_dims[0][1] if res_dims else 0
+            for a in _operand_names(rhs):
+                prod = shapes.get(a, "")
+                operand_bytes += _shape_bytes(prod)
+                dims_a = _shape_dims(prod)
+                if not dims_a:
+                    continue
+                dt_a, elems = dims_a[0]
+                full_w = _DTYPE_BYTES[dt_a]
+                pw = _producer_narrow_width(prod, shapes, comps, elems, full_w)
+                cw = full_w
+                if res_elems:
+                    cw = _consumer_narrow_width(op.name, users, shapes, comps,
+                                                res_elems, full_w)
+                if movement:
+                    # converts commute through pure data movement
+                    w = min(pw, cw)
+                else:
+                    # reductions: narrow ONLY when both sides witness the
+                    # narrow dtype — the CPU FloatNormalization sandwich
+                    # around a semantically-bf16 psum.  A genuine f32
+                    # reduction (f32 grads) keeps full width.
+                    w = max(pw, cw)
+                operand_bytes_c += elems * w
+            res = _shape_bytes(rhs)
+            ratio = (operand_bytes_c / operand_bytes) if operand_bytes else 1.0
+            n = _group_size(rhs, n_devices)
+            if kind == "all-reduce":
+                moved = 2 * (n - 1) / max(n, 1) * operand_bytes
+            elif kind == "all-gather":
+                moved = (n - 1) / max(n, 1) * max(res, operand_bytes)
+            elif kind == "reduce-scatter":
+                moved = (n - 1) / max(n, 1) * operand_bytes
+            elif kind == "all-to-all":
+                moved = (n - 1) / max(n, 1) * max(operand_bytes, res)
+            else:
+                moved = operand_bytes
+            moved_c = moved * ratio
+            coll_bytes[kind] += moved_c * m
+            coll_counts[kind] += int(m)
+            total_coll += moved_c * m
+            total_coll_raw += moved * m
+            dts = _shape_dims(rhs)
+            dt = dts[0][0] if dts else "?"
+            if ratio < 0.999:
+                bits = max(1, round(8 * _DTYPE_BYTES.get(dt, 4) * ratio))
+                dt = f"{dt}->w{bits}"
+            coll_dtype[dt] = coll_dtype.get(dt, 0.0) + moved_c * m
+
+    return HloStats(
+        dot_flops=dot_flops,
+        dot_bytes=dot_bytes,
+        op_result_bytes=result_bytes,
+        collective_bytes=total_coll,
+        collective_op_bytes=coll_bytes,
+        collective_op_counts=coll_counts,
+        max_trip=max_trip,
+        collective_dtype_bytes=coll_dtype,
+        collective_bytes_raw=total_coll_raw,
+    )
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                  # trip-corrected dot FLOPs (per device)
+    hbm_bytes: float              # trip-corrected result-bytes traffic proxy
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_frac: float
+    raw_cost_flops: float         # uncorrected cost_analysis (cross-check)
+    raw_cost_bytes: float
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(stats: HloStats, cost: dict,
+             model_flops_per_device: float, io_bytes: float = 0.0) -> RooflineTerms:
+    """Memory term = dot operand/result traffic + program I/O (params/state
+    read+written once).  Elementwise chains are assumed fused into the dots
+    (the TPU compiler does); `op_result_bytes` is kept as the no-fusion upper
+    bound in the artifact."""
+    flops = stats.dot_flops
+    hbm = stats.dot_bytes + io_bytes
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = stats.collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm, collective_bytes=stats.collective_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops_per_device,
+        useful_flops_frac=(model_flops_per_device / flops) if flops else 0.0,
+        raw_cost_flops=float(cost.get("flops", -1.0)),
+        raw_cost_bytes=float(cost.get("bytes accessed", -1.0)),
+    )

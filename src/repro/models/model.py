@@ -1,0 +1,511 @@
+"""Unified LM covering every assigned architecture family.
+
+An architecture is a sequence of *stages*; each stage is `(repeat, kinds)` —
+`kinds` is a tuple of block kinds executed in order, and the stage is scanned
+`repeat` times with per-kind parameters stacked along a leading "layers" axis
+(`jax.lax.scan` keeps the HLO small: 512-device SPMD lowering of a 95-layer
+model compiles in seconds).
+
+Block kinds:
+  attn         dense attention (+MLP); window per cfg.attn_pattern
+  local/global gemma3 5:1 interleave (sliding window vs full)
+  moe          attention + top-k routed experts
+  mamba        Mamba2 selective-SSM block (zamba2)
+  shared_attn  zamba2's weight-shared attention block (one param set, many
+               invocations, per-invocation KV caches)
+  mlstm/slstm  xLSTM blocks
+  enc / dec    encoder (bidirectional) / decoder (causal + cross-attn)
+
+Entry points: `init`, `loss_fn` (train), `prefill` + `serve_step` (inference),
+`encode` (enc-dec).  All return/accept explicit pytrees; logical-axis spec
+trees mirror the params for the sharding rules in `repro.parallel`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel import actx
+from repro.parallel import wire as W
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# stage layout
+# ---------------------------------------------------------------------------
+
+
+def stages(cfg: ModelConfig) -> List[Tuple[int, Tuple[str, ...]]]:
+    nl = cfg.n_layers
+    if cfg.family in ("dense", "vlm"):
+        return [(nl, ("attn",))]
+    if cfg.family == "moe":
+        return [(nl, ("moe",))]
+    if cfg.attn_pattern == "local_global" and cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        group = ("local",) * r + ("global",)
+        full, rem = divmod(nl, r + 1)
+        out = [(full, group)]
+        if rem:
+            out.append((1, ("local",) * rem))
+        return out
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        e = cfg.hybrid_attn_every
+        group = ("mamba",) * (e - 1) + ("shared_attn",)
+        full, rem = divmod(nl, e)
+        out = [(full, group)]
+        if rem:
+            out.append((1, ("mamba",) * rem))
+        return out
+    if cfg.family == "ssm" and cfg.slstm_ratio:
+        r = cfg.slstm_ratio
+        group = ("mlstm",) * (r - 1) + ("slstm",)
+        full, rem = divmod(nl, r)
+        out = [(full, group)]
+        if rem:
+            out.append((1, ("mlstm",) * rem))
+        return out
+    if cfg.family == "audio":
+        return [(nl, ("dec",))]
+    raise ValueError(f"cannot derive stages for {cfg.name}")
+
+
+_ATTN_KINDS = ("attn", "local", "global", "moe", "shared_attn", "enc", "dec")
+
+
+def _kind_window(cfg: ModelConfig, kind: str) -> int:
+    if kind == "local":
+        return cfg.window
+    if kind == "global":
+        return 0
+    if kind in ("attn", "moe"):
+        return cfg.window if cfg.attn_pattern == "sliding" else 0
+    if kind == "shared_attn":
+        # TPU adaptation (DESIGN.md): hybrid shared-attn uses sliding window at
+        # long context; window=0 within normal contexts
+        return cfg.window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ModelConfig, kind: str, key) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 3)
+    if kind in ("attn", "local", "global", "enc"):
+        pa, sa = L.init_attention(cfg, ks[0])
+        pm, sm = L.init_mlp(cfg, ks[1]) if cfg.d_ff else ({}, {})
+        return {"attn": pa, **({"mlp": pm} if pm else {})}, \
+               {"attn": sa, **({"mlp": sm} if sm else {})}
+    if kind == "moe":
+        pa, sa = L.init_attention(cfg, ks[0])
+        pe, se = L.init_moe(cfg, ks[1])
+        return {"attn": pa, "moe": pe}, {"attn": sa, "moe": se}
+    if kind == "mamba":
+        return (lambda r: ({"mamba": r[0]}, {"mamba": r[1]}))(L.init_mamba(cfg, ks[0]))
+    if kind == "shared_attn":
+        return {}, {}  # params live in the shared slot
+    if kind == "mlstm":
+        return (lambda r: ({"mlstm": r[0]}, {"mlstm": r[1]}))(L.init_mlstm(cfg, ks[0]))
+    if kind == "slstm":
+        return (lambda r: ({"slstm": r[0]}, {"slstm": r[1]}))(L.init_slstm(cfg, ks[0]))
+    if kind == "dec":
+        pa, sa = L.init_attention(cfg, ks[0])
+        px, sx = L.init_cross_attention(cfg, ks[1])
+        pm, sm = L.init_mlp(cfg, ks[2])
+        return {"attn": pa, "cross": px, "mlp": pm}, \
+               {"attn": sa, "cross": sx, "mlp": sm}
+    raise ValueError(kind)
+
+
+def _stack_init(cfg: ModelConfig, kind: str, key, repeat: int):
+    keys = jax.random.split(key, repeat)
+    _, spec = _init_block(cfg, kind, keys[0])
+    stacked = jax.vmap(lambda k: _init_block(cfg, kind, k)[0])(keys)
+    spec = jax.tree.map(lambda ax: ("layers",) + tuple(ax), spec,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, spec
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    keys = jax.random.split(key, 8 + len(stages(cfg)))
+    p: Params = {}
+    s: Params = {}
+    emb_scale = cfg.d_model ** -0.5
+    p["embed"] = jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * emb_scale
+    s["embed"] = ("vocab", "embed")
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(keys[1], (cfg.d_model, cfg.vocab)) * emb_scale
+        s["lm_head"] = ("embed", "vocab")
+    p["final_norm"] = jnp.zeros((cfg.d_model,))
+    s["final_norm"] = (None,)
+
+    p["stages"], s["stages"] = [], []
+    for i, (repeat, kinds) in enumerate(stages(cfg)):
+        sp, ss = {}, {}
+        for j, kind in enumerate(kinds):
+            name = f"{kind}_{j}"
+            sp[name], ss[name] = _stack_init(cfg, kind, jax.random.fold_in(keys[2 + i], j), repeat)
+        p["stages"].append(sp)
+        s["stages"].append(ss)
+
+    if any("shared_attn" in kinds for _, kinds in stages(cfg)):
+        pa, sa = L.init_attention(cfg, keys[6])
+        p["shared_attn"], s["shared_attn"] = pa, sa
+
+    if cfg.encoder_layers:
+        enc_p, enc_s = _stack_init(cfg, "enc", keys[7], cfg.encoder_layers)
+        p["encoder"] = {"blocks": enc_p, "norm": jnp.zeros((cfg.d_model,))}
+        s["encoder"] = {"blocks": enc_s, "norm": (None,)}
+    return p, s
+
+
+def init_abstract(cfg: ModelConfig):
+    """(params as ShapeDtypeStructs, logical-axis specs) with NO allocation —
+    the dry-run path for 314B-parameter configs on a CPU container."""
+    box = {}
+
+    def f(key):
+        p, s = init(cfg, key)
+        box["s"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["s"]
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _kind_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    dt = L.compute_dtype(cfg)
+    hk, dh = cfg.n_kv_heads, cfg.head_dim_
+    if kind in _ATTN_KINDS:
+        w = _kind_window(cfg, kind)
+        length = min(w, cache_len) if w else cache_len
+        z = jnp.zeros((batch, hk, length, dh), dt)
+        return {"k": z, "v": z}, {"k": ("batch", "kv_heads", "cache", "head_dim"),
+                                  "v": ("batch", "kv_heads", "cache", "head_dim")}
+    if kind == "mamba":
+        hm, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+        return (
+            {"state": jnp.zeros((batch, hm, pdim, n), jnp.float32),
+             "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dt)},
+            {"state": ("batch", None, None, None),
+             "conv": ("batch", None, "ffn")},
+        )
+    if kind == "mlstm":
+        h, dh_ = cfg.n_heads, cfg.head_dim_
+        return (
+            {"C": jnp.zeros((batch * h, dh_, dh_), jnp.float32),
+             "n": jnp.zeros((batch * h, 1, dh_), jnp.float32)},
+            {"C": ("batch", None, None), "n": ("batch", None, None)},
+        )
+    if kind == "slstm":
+        m = cfg.d_model
+        z = jnp.zeros((batch, m), jnp.float32)
+        sp = ("batch", None)
+        return {"h": z, "c": z, "n": z, "m": z - 10.0}, \
+               {"h": sp, "c": sp, "n": sp, "m": sp}
+    raise ValueError(kind)
+
+
+def init_cache_abstract(cfg: ModelConfig, batch: int, cache_len: int):
+    """(cache ShapeDtypeStructs, specs) without allocation."""
+    box = {}
+
+    def f():
+        c, s = init_cache(cfg, batch, cache_len)
+        box["s"] = s
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, box["s"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    cache, spec = [], []
+    for repeat, kinds in stages(cfg):
+        cs, ss = {}, {}
+        for j, kind in enumerate(kinds):
+            c1, s1 = _kind_cache(cfg, kind, batch, cache_len)
+            cs[f"{kind}_{j}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (repeat,) + x.shape), c1)
+            ss[f"{kind}_{j}"] = jax.tree.map(
+                lambda ax: ("layers",) + tuple(ax), s1,
+                is_leaf=lambda x: isinstance(x, tuple))
+        cache.append(cs)
+        spec.append(ss)
+    return cache, spec
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg: ModelConfig, kind: str, p: Params, x, positions, *,
+                 shared: Optional[Params], cache, cache_pos, enc_out):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local", "global"):
+        w = _kind_window(cfg, kind)
+        x, nc = L.apply_attention(cfg, p["attn"], x, positions, window=w,
+                                  cache=cache and _sub(cache), cache_pos=cache_pos)
+        if "mlp" in p:
+            x = L.apply_mlp(cfg, p["mlp"], x)
+        return x, nc, aux
+    if kind == "moe":
+        w = _kind_window(cfg, kind)
+        x, nc = L.apply_attention(cfg, p["attn"], x, positions, window=w,
+                                  cache=cache and _sub(cache), cache_pos=cache_pos)
+        x, aux = L.apply_moe(cfg, p["moe"], x)
+        return x, nc, aux
+    if kind == "shared_attn":
+        w = _kind_window(cfg, kind)
+        x, nc = L.apply_attention(cfg, shared, x, positions, window=w,
+                                  cache=cache and _sub(cache), cache_pos=cache_pos)
+        return x, nc, aux
+    if kind == "mamba":
+        x, nc = L.apply_mamba(cfg, p["mamba"], x, cache=cache)
+        return x, nc, aux
+    if kind == "mlstm":
+        x, nc = L.apply_mlstm(cfg, p["mlstm"], x, cache=cache)
+        return x, nc, aux
+    if kind == "slstm":
+        x, nc = L.apply_slstm(cfg, p["slstm"], x, cache=cache)
+        return x, nc, aux
+    if kind == "enc":
+        x, nc = L.apply_attention(cfg, p["attn"], x, positions, causal=False)
+        x = L.apply_mlp(cfg, p["mlp"], x)
+        return x, nc, aux
+    if kind == "dec":
+        x, nc = L.apply_attention(cfg, p["attn"], x, positions,
+                                  cache=cache and _sub(cache), cache_pos=cache_pos)
+        x = L.apply_cross_attention(cfg, p["cross"], x, enc_out, positions)
+        x = L.apply_mlp(cfg, p["mlp"], x)
+        return x, nc, aux
+    raise ValueError(kind)
+
+
+def _sub(cache):
+    return {"k": cache["k"], "v": cache["v"]} if cache and "k" in cache else cache
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if cfg.remat == "dots_all":
+        # save EVERY dot output (attention einsums included): no matmul is
+        # ever recomputed in backward — §Perf deepseek iteration 4 (trades
+        # activation memory for the last ~10% of recompute)
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+def _run_stages(cfg: ModelConfig, params: Params, x, positions, *,
+                cache=None, cache_pos=None, enc_out=None):
+    """Scan every stage.  Returns (x, new_cache, aux_total)."""
+    shared = params.get("shared_attn")
+    new_cache_all = [] if cache is not None else None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for si, (repeat, kinds) in enumerate(stages(cfg)):
+        sp = params["stages"][si]
+        scache = cache[si] if cache is not None else None
+
+        def body(carry, xs, _kinds=kinds):
+            xc, auxc = carry
+            xc = actx.constrain_batch(xc)
+            layer_p, layer_c = xs
+            # int8 wire pairs (repro.parallel.wire) dequantize at body entry,
+            # so the per-layer ZeRO-3 all-gather moves the 1-byte payload
+            layer_p = W.dequant_subtree(layer_p, L.compute_dtype(cfg))
+            new_c = {}
+            for j, kind in enumerate(_kinds):
+                name = f"{kind}_{j}"
+                c_j = layer_c.get(name) if layer_c is not None else None
+                xc, nc, aux = _apply_block(
+                    cfg, kind, layer_p.get(name, {}), xc, positions,
+                    shared=shared, cache=c_j, cache_pos=cache_pos,
+                    enc_out=enc_out)
+                if nc is not None:
+                    new_c[name] = nc
+            return (xc, auxc + aux), new_c
+
+        body = _remat(cfg, body)
+        xs = (sp, scache)
+        if cache is None:
+            xs = (sp, None)
+            (x, aux_total), _ = jax.lax.scan(
+                lambda c, lp: body(c, (lp, None)), (x, aux_total), sp)
+        else:
+            (x, aux_total), ncs = jax.lax.scan(body, (x, aux_total), xs)
+            new_cache_all.append(ncs)
+    return x, new_cache_all, aux_total
+
+
+# ---------------------------------------------------------------------------
+# embedding / heads
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array):
+    dt = L.compute_dtype(cfg)
+    return actx.constrain_batch(params["embed"].astype(dt)[tokens])
+
+
+def logits_head(cfg: ModelConfig, params: Params, h: jax.Array):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return L.linear(cfg, w, h).astype(jnp.float32)
+
+
+def default_positions(cfg: ModelConfig, batch: int, seq: int, offset=0):
+    """offset: scalar, or (B,) vector (continuous batching — per-slot
+    positions)."""
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim == 1:
+        off = off[:, None]
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + off
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope:
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# encoder (seamless)
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, params: Params, enc_embeds: jax.Array):
+    """enc_embeds: precomputed audio-frontend frames (B, Se, M) — the modality
+    frontend is a stub per the assignment."""
+    b, se, _ = enc_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32)[None], (b, se))
+    x = enc_embeds.astype(L.compute_dtype(cfg))
+    ep = params["encoder"]["blocks"]
+
+    def body(carry, lp):
+        xc, aux = carry
+        xc = actx.constrain_batch(xc)
+        lp = W.dequant_subtree(lp, L.compute_dtype(cfg))
+        xc, _, a = _apply_block(cfg, "enc", lp["enc_0"], xc, positions,
+                                shared=None, cache=None, cache_pos=None,
+                                enc_out=None)
+        return (xc, aux + a), None
+
+    (x, _), _ = jax.lax.scan(_remat(cfg, body), (x, jnp.zeros((), jnp.float32)),
+                             {"enc_0": ep} if "enc_0" not in ep else ep)
+    return L.rms_norm(x, params["encoder"]["norm"])
+
+
+# ---------------------------------------------------------------------------
+# train / serve entry points
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]):
+    """Full-sequence forward.  Returns (hidden, aux)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.frontend == "vision" and "pixel_embeds" in batch:
+        npix = batch["pixel_embeds"].shape[1]
+        x = jnp.concatenate(
+            [batch["pixel_embeds"].astype(x.dtype), x[:, npix:]], axis=1)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(cfg, params, batch["enc_embeds"])
+    x, _, aux = _run_stages(cfg, params, x, positions, enc_out=enc_out)
+    return L.rms_norm(x, params["final_norm"]), aux
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]):
+    """Chunked cross-entropy: logits are materialized one sequence-chunk at a
+    time (under remat) so the (B,S,V) tensor never exists."""
+    h, aux = forward_hidden(cfg, params, batch)
+    h = actx.constrain_batch(h)
+    labels = batch["labels"]
+    b, s, m = h.shape
+    chunk = min(cfg.loss_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, n_chunks, chunk, m), 1, 0)
+    yc = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+
+    @_remat_ce(cfg)
+    def chunk_ce(hx, yx):
+        logits = actx.constrain(logits_head(cfg, params, hx),
+                                ("dp", None, "tp"))    # (B, chunk, V) f32
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yx[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    total = jnp.sum(jax.lax.map(lambda args: chunk_ce(*args), (hc, yc)))
+    ntok = b * s
+    loss = total / ntok + 1e-2 * aux
+    return loss, {"ce": total / ntok, "aux": aux}
+
+
+def _remat_ce(cfg):
+    def deco(fn):
+        return jax.checkpoint(fn) if cfg.remat != "none" else fn
+    return deco
+
+
+def train_logits(cfg: ModelConfig, params: Params, batch):
+    """Small-scale helper (tests/examples): full logits."""
+    h, _ = forward_hidden(cfg, params, batch)
+    return logits_head(cfg, params, h)
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            cache_len: int | None = None):
+    """Run the full prompt, return (last_logits, cache).  `cache_len` sizes
+    the KV/state cache (>= prompt length; default prompt + 1 so at least one
+    decode step fits)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    enc_out = encode(cfg, params, batch["enc_embeds"]) if cfg.encoder_layers else None
+
+    cache, _ = init_cache(cfg, b, cache_len or (s + 1))
+    x, new_cache, _ = _run_stages(cfg, params, x, positions,
+                                  cache=cache, cache_pos=jnp.int32(0),
+                                  enc_out=enc_out)
+    h = L.rms_norm(x[:, -1:], params["final_norm"])
+    return logits_head(cfg, params, h), new_cache
+
+
+def serve_step(cfg: ModelConfig, params: Params, cache, tokens: jax.Array,
+               pos: jax.Array, enc_out: Optional[jax.Array] = None):
+    """One decode step: tokens (B,1) at absolute position `pos` (scalar).
+    Returns (logits (B,1,V), new_cache)."""
+    b = tokens.shape[0]
+    x = embed_tokens(cfg, params, tokens)
+    positions = default_positions(cfg, b, 1, offset=pos)
+    x, new_cache, _ = _run_stages(cfg, params, x, positions,
+                                  cache=cache, cache_pos=pos, enc_out=enc_out)
+    h = L.rms_norm(x, params["final_norm"])
+    return logits_head(cfg, params, h), new_cache

@@ -1,0 +1,90 @@
+"""Activation-sharding context.
+
+GSPMD propagates parameter shardings into activations; with FSDP-sharded
+embeddings that makes activations flow `embed@data` and REPLICATES the batch
+dimension (verified on the yi-6b dry-run: attention compute blew up 16x).
+Model code therefore pins activations to batch-over-DP at stable points
+(embedding output, scan-body entry, pre-loss hidden) through this context.
+
+The context is set by the launcher/dry-run around `.lower()`; without it
+(unit tests, single device) every call is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE: dict = {"mesh": None, "dp": None, "tp": None, "seq_tp": False,
+                "wire_ok": False}
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, dp_axes: Optional[Tuple[str, ...]],
+                        tp_axis: Optional[str] = "model",
+                        seq_tp: bool = False, wire_ok: bool = False):
+    prev = dict(_STATE)
+    _STATE.update(mesh=mesh, dp=dp_axes, tp=tp_axis, seq_tp=seq_tp,
+                  wire_ok=wire_ok)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def wire_active() -> bool:
+    """int8 weight wire-format is only meaningful when params are fully
+    sharded and compute wants them whole (ZeRO-3 / fsdp_all) — the launcher
+    sets `wire_ok` there; under TP the weights must stay TP-sharded."""
+    return bool(_STATE["wire_ok"]) and active()
+
+
+def active() -> bool:
+    return _STATE["mesh"] is not None
+
+
+def constrain(x: jax.Array, spec: Tuple) -> jax.Array:
+    """spec entries: 'dp' -> the context's data-parallel axes, 'tp' -> tensor
+    axis, None -> unsharded."""
+    if not active() or x.ndim != len(spec):
+        return x
+    resolved = []
+    used: set = set()
+    for s in spec:
+        if s == "dp":
+            ax = _STATE["dp"]
+        elif s == "tp":
+            ax = _STATE["tp"]
+        else:
+            ax = None
+        if ax is not None:  # a mesh axis may appear at most once per spec
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            axes = tuple(a for a in axes if a not in used)
+            used.update(axes)
+            ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+        resolved.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_STATE["mesh"], P(*resolved)))
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Batch-leading activation: (B, ...) -> B over DP axes."""
+    return constrain(x, ("dp",) + (None,) * (x.ndim - 1))
+
+
+def constrain_seq(x: jax.Array) -> jax.Array:
+    """seq_tp (context-parallel attention): (B, S, M) -> S over the TP axis.
+    No-op unless the context enables sequence-TP."""
+    if not active() or not _STATE["seq_tp"] or x.ndim != 3:
+        return x
+    return constrain(x, ("dp", "tp", None))
+
+
+def constrain_unseq(x: jax.Array) -> jax.Array:
+    """Megatron-SP transition back: gather S, hand the TP axis to the MLP."""
+    if not active() or not _STATE["seq_tp"] or x.ndim != 3:
+        return x
+    return constrain(x, ("dp", None, None))

@@ -1,0 +1,255 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Model code annotates parameters with logical axes ("embed", "heads", "ffn",
+"vocab", "experts", ...); this module maps them onto mesh axes with
+per-architecture and per-shape decisions, enforcing divisibility (an axis that
+does not divide falls back to the next rule or to replication — e.g. yi-34b's
+56 heads cannot split 16 ways, so its attention TP shards `head_dim` instead;
+seamless's 256206 vocab stays replicated).
+
+This mirrors the paper's mapping: the `data` axis is the memory-chiplet side
+(SWMR parameter all-gathers / SWSR gradient reduce-scatters under FSDP); the
+`model` axis is the compute-chiplet side; the `pod` axis is the cross-
+subnetwork axis whose stage count the TRINE collectives minimize.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return sizes[axes]
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh,
+              strategy: Optional[str] = None) -> Dict[str, Any]:
+    """Logical axis -> mesh axes (None = replicate), validated against cfg.
+
+    Strategies (EXPERIMENTS.md §Perf):
+      tp_fsdp  — Megatron TP on `model` + FSDP on fsdp_axes (baseline).
+      fsdp_all — ZeRO-3 over the whole mesh; batch also spans `model`.
+                 No TP activation all-reduces; params all-gather per layer.
+      seq_tp   — FSDP + TP MLP, but attention runs context-parallel
+                 (sequence sharded over `model`) — no head-count constraint.
+    """
+    strategy = strategy or cfg.parallel_strategy
+    fsdp = tuple(a for a in cfg.fsdp_axes if a in mesh.axis_names) or ("data",)
+    tp = "model"
+    tp_n = _axis_size(mesh, tp)
+
+    if strategy == "fsdp_all":
+        full = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        return {
+            "layers": None,
+            "embed": full if cfg.d_model % _axis_size(mesh, full) == 0 else fsdp,
+            "ffn": None, "vocab": None, "experts": None,
+            "batch": None, "cache": None,
+            "head_dim": None, "kv_heads": None, "heads": None,
+        }
+
+    rules: Dict[str, Any] = {
+        "layers": None,
+        "embed": fsdp,
+        "ffn": tp,
+        "vocab": tp if cfg.vocab % tp_n == 0 else None,
+        "experts": tp if cfg.n_experts and cfg.n_experts % tp_n == 0 else None,
+        "batch": None,   # set per-shape by batch_rules
+        "cache": None,
+        "head_dim": None,
+        "kv_heads": None,
+        "heads": None,
+    }
+    if strategy == "seq_tp":
+        # attention weights replicated over `model`; sequence carries the TP
+        return rules
+    # attention TP: prefer heads; fall back to head_dim (contraction sharding)
+    if cfg.n_heads % tp_n == 0:
+        rules["heads"] = tp
+        if cfg.n_kv_heads % tp_n == 0:
+            rules["kv_heads"] = tp
+    elif cfg.head_dim_ % tp_n == 0:
+        rules["head_dim"] = tp
+    # experts sharded over tp -> per-expert ffn must stay replicated on tp
+    if rules["experts"] == tp:
+        rules["ffn"] = None
+    if cfg.d_ff and rules["ffn"] == tp and cfg.d_ff % tp_n != 0:
+        rules["ffn"] = None
+    return rules
+
+
+def spec_to_pspec(axes: Optional[Tuple], rules: Dict[str, Any]) -> P:
+    if axes is None:
+        return P()
+    out = []
+    used: set = set()
+
+    def usable(m):
+        if m is None:
+            return None
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        if any(x in used for x in ms):
+            return None
+        used.update(ms)
+        return m
+
+    for ax in axes:
+        m = usable(rules.get(ax)) if ax is not None else None
+        out.append(m)
+    return P(*out)
+
+
+def is_axes_leaf(x) -> bool:
+    """A spec leaf is None or a tuple of axis names/None — NOT an arbitrary
+    tuple (TrainState is a NamedTuple and must be recursed into)."""
+    return x is None or (
+        isinstance(x, tuple)
+        and not hasattr(x, "_fields")
+        and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def tree_pspecs(spec_tree, rules):
+    return jax.tree.map(
+        lambda axes: spec_to_pspec(axes, rules),
+        spec_tree,
+        is_leaf=is_axes_leaf,
+    )
+
+
+def tree_shardings(mesh: Mesh, spec_tree, rules):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps),
+        tree_pspecs(spec_tree, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-shape activation / batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh, global_batch: int,
+               strategy: str = "tp_fsdp") -> Optional[Tuple[str, ...]]:
+    """Largest prefix of the data-parallel axes that divides the batch
+    (fsdp_all spans the model axis too)."""
+    names = (("pod", "data", "model") if strategy == "fsdp_all"
+             else ("pod", "data"))
+    cand = [a for a in names if a in mesh.axis_names]
+    chosen: Tuple[str, ...] = ()
+    for take in range(len(cand), 0, -1):
+        axes = tuple(cand[:take])
+        if global_batch % _axis_size(mesh, axes) == 0:
+            chosen = axes
+            break
+    return chosen or None
+
+
+def batch_pspec(mesh: Mesh, batch_leaf_ndim: int, global_batch: int,
+                seq_shard: bool = False) -> P:
+    ba = batch_axes(mesh, global_batch)
+    return P(ba, *([None] * (batch_leaf_ndim - 1)))
+
+
+def train_batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_spec,
+                          strategy: str = None):
+    """Shard every batch leaf on its batch dimension (positions leaf has
+    leading 3 for M-RoPE)."""
+    strategy = strategy or cfg.parallel_strategy
+
+    def leaf_sharding(leaf):
+        shape = leaf.shape
+        if len(shape) >= 3 and shape[0] == 3:  # (3, B, S) M-RoPE positions
+            b = shape[1]
+            ps = P(None, batch_axes(mesh, b, strategy),
+                   *([None] * (len(shape) - 2)))
+        else:
+            b = shape[0]
+            ps = P(batch_axes(mesh, b, strategy),
+                   *([None] * (len(shape) - 1)))
+        return NamedSharding(mesh, ps)
+
+    return jax.tree.map(leaf_sharding, batch_spec)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_spec, global_batch: int,
+                    rules: Dict[str, Any]):
+    """Decode caches.  Batch shards over (pod, data) when divisible; the KV
+    head dim shards over `model` when divisible, otherwise the cache LENGTH
+    takes the leftover axes (sequence-parallel / flash-decoding: GSPMD emits
+    the partial-softmax renormalization collectives).  Every leaf is then
+    divisibility-checked (`enforce_divisibility`) since recurrent-state caches
+    have batch*heads leading dims."""
+    tp_n = _axis_size(mesh, "model")
+    ba = batch_axes(mesh, global_batch)
+    kv_ok = cfg.n_kv_heads % tp_n == 0
+    seq_axes = []
+    if ba is None:
+        seq_axes += [a for a in ("pod", "data") if a in mesh.axis_names]
+    if not kv_ok:
+        seq_axes.append("model")
+    local_rules = dict(rules)
+    local_rules["batch"] = ba
+    local_rules["kv_heads"] = "model" if kv_ok else None
+    local_rules["cache"] = tuple(seq_axes) if seq_axes else None
+    return tree_shardings(mesh, cache_spec, local_rules)
+
+
+def fix_pspec_for_shape(mesh: Mesh, ps: P, shape) -> P:
+    """Drop mesh axes from any dim of `ps` they do not divide (single-leaf
+    version of `enforce_divisibility`, usable at trace time)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = list(ps) + [None] * (len(shape) - len(ps))
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        keep, n = [], 1
+        for a in axes:
+            if dim % (n * sizes[a]) == 0:
+                keep.append(a)
+                n *= sizes[a]
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def enforce_divisibility(sharding_tree, shape_tree):
+    """Drop mesh axes from any dim they do not divide (per-leaf fixup for
+    odd-sized leading dims like B*H recurrent states)."""
+    def fix(sh: NamedSharding, leaf):
+        spec = list(sh.spec) + [None] * (len(leaf.shape) - len(sh.spec))
+        mesh = sh.mesh
+        out = []
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            keep = []
+            n = 1
+            for a in axes:
+                sz = dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                if dim % (n * sz) == 0:
+                    keep.append(a)
+                    n *= sz
+            out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(fix, sharding_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))

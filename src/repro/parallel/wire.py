@@ -1,0 +1,198 @@
+"""Parameter wire formats — what dtype crosses the interposer (§Perf).
+
+The 2.5D-CrossLight interposer ships weights to photonic MAC banks at the MR
+amplitude resolution (8 bits).  The TPU-mesh analog: under ZeRO-3 the
+dominant collective is the per-layer parameter all-gather.  Getting the
+narrow payload onto that wire took three measured iterations (all recorded
+in EXPERIMENTS.md §Perf):
+
+  1. value-level STE inside the layer (`w + stop_grad(deq(q(w)) - w)`)
+     REFUTED — forces a full-precision gather of the master itself
+     (collective 11.35 s -> 22.17 s on deepseek train_4k).
+  2. tree-level quantize->pin->dequant at step entry REFUTED — XLA hoists
+     the dequant out of the layer scan, so the scan carries (and gathers)
+     the full-precision tensor; also a custom_vjp returning the int8 tensor
+     gets a float0 cotangent that silently severs the weight-gradient path
+     (observed as a bogus 3x compute drop).
+  3. THIS design (works): scanned parameter stacks are carried through the
+     scan as `{~q: int8, ~s: scale}` pairs and dequantized INSIDE the scan
+     body (`dequant_subtree`, called by the model at body entry) — the same
+     structure torchao/NVIDIA use for fp8 FSDP all-gathers.  Gradients flow
+     through a zero-valued delta (`~d`) grafted onto each pair inside the
+     differentiated function: d(loss)/d(delta) IS the straight-through
+     master gradient, no custom_vjp and no float0 anywhere.  XLA folds the
+     `+0` away in the primal.
+
+Non-scanned leaves (embedding, lm_head, shared attention, encoder norm) are
+transformed in-place inside the differentiated function: int8
+quantize->pin->dequant through a float-boundary custom_vjp, or a bf16
+cast->pin for `wire_bits=16`.
+
+Only >=2-D float32 leaves are transformed; norm scales and biases stay f32.
+Quantization scales are per-layer for stacked leaves, per-tensor otherwise
+(QAT adapts; `tests/test_runtime.py::test_wire_format_training_converges`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel import sharding as S
+
+WIRE_Q, WIRE_S, WIRE_D = "~q", "~s", "~d"
+
+
+def is_pair(x) -> bool:
+    return isinstance(x, dict) and WIRE_Q in x
+
+
+def _quantize_array(w: jax.Array, bits: int):
+    """(int8 levels, f32 scale); per-layer scale for stacked (ndim>=3)."""
+    qmax = 2.0 ** (bits - 1) - 1
+    wf = w.astype(jnp.float32)
+    axes = tuple(range(1, wf.ndim)) if wf.ndim >= 3 else tuple(range(wf.ndim))
+    scale = jnp.maximum(jnp.max(jnp.abs(wf), axis=axes, keepdims=True), 1e-8) / qmax
+    q = jnp.round(wf / scale).astype(jnp.int8)
+    return q, scale
+
+
+def dequant_subtree(subtree, compute_dtype):
+    """Model-side hook (scan-body entry): wire pairs -> plain arrays.
+    The per-layer all-gather this induces moves the int8 payload."""
+    def leaf(x):
+        if not is_pair(x):
+            return x
+        wd = x[WIRE_Q].astype(compute_dtype) * x[WIRE_S].astype(compute_dtype)
+        if WIRE_D in x:
+            wd = wd + x[WIRE_D].astype(compute_dtype)
+        return wd
+    return jax.tree.map(leaf, subtree, is_leaf=is_pair)
+
+
+# float-boundary custom_vjp for NON-scanned int8 leaves (embed/head/shared)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _quant_leaf(w: jax.Array, bits: int, sharding, compute_dtype):
+    return _quant_leaf_impl(w, bits, sharding, compute_dtype)
+
+
+def _quant_leaf_impl(w, bits, sharding, compute_dtype):
+    q, scale = _quantize_array(w, bits)
+    if sharding is not None:
+        q = jax.lax.with_sharding_constraint(q, sharding)
+    return q.astype(compute_dtype) * scale.astype(compute_dtype)
+
+
+def _quant_fwd(w, bits, sharding, compute_dtype):
+    return _quant_leaf_impl(w, bits, sharding, compute_dtype), None
+
+
+def _quant_bwd(bits, sharding, compute_dtype, _res, g):
+    return (g.astype(jnp.float32),)   # straight-through to the f32 master
+
+
+_quant_leaf.defvjp(_quant_fwd, _quant_bwd)
+
+
+def _eligible(w) -> bool:
+    return hasattr(w, "ndim") and w.ndim >= 2 and w.dtype == jnp.float32
+
+
+class ParamWire:
+    """Wire transform for one (cfg, mesh, rules).  Usage (trainer/dryrun):
+
+        pw = ParamWire(cfg, mesh, rules, param_specs)
+        def step_fn(state, batch):
+            qtree = pw.quantize(state.params)          # outside AD
+            def loss_v(v):
+                return loss_fn(cfg, pw.graft(qtree, v), batch)
+            (loss, aux), grads = value_and_grad(loss_v, has_aux=True)(
+                pw.carrier(state.params))              # grads == master tree
+    """
+
+    # param subtrees that are scanned with a leading layers axis
+    SCANNED_PREFIXES = (("stages",), ("encoder", "blocks"))
+
+    def __init__(self, cfg, mesh: Mesh, rules, param_specs,
+                 compute_dtype=jnp.bfloat16):
+        self.bits = int(getattr(cfg, "wire_bits", 0) or 0)
+        self.mesh = mesh
+        self.compute_dtype = compute_dtype
+        self.pspec_tree = S.tree_pspecs(param_specs, rules)
+
+    # -- helpers ----------------------------------------------------------
+    def _sharding(self, ps: P, shape) -> NamedSharding:
+        return NamedSharding(self.mesh,
+                             S.fix_pspec_for_shape(self.mesh, ps, shape))
+
+    def _is_scanned(self, path) -> bool:
+        keys = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in path)
+        for pref in self.SCANNED_PREFIXES:
+            if keys[:len(pref)] == pref:
+                return True
+        return False
+
+    def _int8_pairs(self) -> bool:
+        return 0 < self.bits < 16
+
+    # -- step-level API ----------------------------------------------------
+    def quantize(self, params):
+        """Pairs for scanned int8-eligible stacks (leading layers axis =>
+        ndim>=3); everything else passes through untouched (transformed
+        differentiably in `graft`).  Call OUTSIDE value_and_grad."""
+        if not self._int8_pairs():
+            return params
+
+        def leaf(path, w, ps):
+            if self._is_scanned(path) and _eligible(w) and w.ndim >= 3:
+                q, scale = _quantize_array(w, self.bits)
+                q = jax.lax.with_sharding_constraint(
+                    q, self._sharding(ps, w.shape))
+                scale = jax.lax.with_sharding_constraint(
+                    scale, NamedSharding(self.mesh, P()))
+                return {WIRE_Q: q, WIRE_S: scale}
+            return w
+
+        return jax.tree_util.tree_map_with_path(leaf, params, self.pspec_tree)
+
+    def carrier(self, params):
+        """The differentiation variable: zeros at pair positions (the ~d
+        delta), the master arrays everywhere else."""
+        if not self._int8_pairs():
+            return params
+
+        def leaf(path, w):
+            if self._is_scanned(path) and _eligible(w) and w.ndim >= 3:
+                return jnp.zeros(w.shape, jnp.float32)
+            return w
+
+        return jax.tree_util.tree_map_with_path(leaf, params)
+
+    def graft(self, qtree, vtree):
+        """Merge carrier into the quantized tree and apply the differentiable
+        transforms for non-pair leaves.  Call INSIDE value_and_grad."""
+        def leaf(path, q_leaf, v_leaf, ps):
+            if is_pair(q_leaf):
+                return {**q_leaf, WIRE_D: v_leaf}
+            w = v_leaf
+            if not _eligible(w):
+                return w
+            sh = self._sharding(ps, w.shape)
+            if self._int8_pairs():
+                return _quant_leaf(w, self.bits, sh, self.compute_dtype)
+            if self.bits == 16:
+                return jax.lax.with_sharding_constraint(
+                    w.astype(self.compute_dtype), sh)
+            return w
+
+        return jax.tree_util.tree_map_with_path(
+            leaf, qtree, vtree, self.pspec_tree, is_leaf=is_pair)
+
+
+def make_param_wire(cfg, mesh: Mesh, rules, param_specs,
+                    compute_dtype=jnp.bfloat16) -> ParamWire:
+    return ParamWire(cfg, mesh, rules, param_specs, compute_dtype)

@@ -1,0 +1,92 @@
+"""Elastic scaling: a checkpoint written under one mesh restores onto a
+DIFFERENT mesh (fewer/more devices, different axis split) and training
+continues.  This is the lose-a-pod -> re-mesh -> restore -> continue path
+(DESIGN.md §7); runs with 8 fake CPU devices in a subprocess."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    import jax.numpy as jnp
+
+    from repro import configs as C
+    from repro.checkpoint import store
+    from repro.models import model as M
+    from repro.optim import adamw
+    from repro.parallel import sharding as S, actx
+    from repro.runtime.trainer import make_train_step
+    from repro.launch.mesh import make_test_mesh
+
+    cfg = C.get_reduced("yi_6b")
+    opt = adamw.OptConfig(lr=1e-3, warmup_steps=1, total_steps=8)
+    params, pspecs = M.init(cfg, jax.random.PRNGKey(0))
+    state = adamw.init_state(opt, params)
+    batch = {"tokens": jnp.ones((4, 64), jnp.int32),
+             "labels": jnp.ones((4, 64), jnp.int32)}
+    ckdir = tempfile.mkdtemp()
+
+    def build(mesh):
+        rules = S.rules_for(cfg, mesh)
+        st_sh = S.enforce_divisibility(
+            S.tree_shardings(mesh, adamw.state_specs(pspecs), rules),
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+        b_sh = S.train_batch_shardings(cfg, mesh, batch)
+        step = jax.jit(make_train_step(cfg, opt), in_shardings=(st_sh, b_sh))
+        return step, st_sh, b_sh
+
+    # ---- phase 1: 8 devices as (pod=2, data=2, model=2) ----
+    mesh1 = make_test_mesh(data=2, model=2, pod=2)
+    step1, st_sh1, b_sh1 = build(mesh1)
+    dp1 = S.batch_axes(mesh1, 4)
+    with mesh1, actx.activation_sharding(mesh1, dp1):
+        s = jax.device_put(state, st_sh1)
+        b = jax.device_put(batch, b_sh1)
+        for _ in range(2):
+            s, m = step1(s, b)
+    store.save(ckdir, 2, s)
+    loss1 = float(m["loss"])
+
+    # ---- phase 2: "lost a pod" -> re-mesh 8 devices as (data=4, model=2) ----
+    mesh2 = make_test_mesh(data=4, model=2)
+    step2, st_sh2, b_sh2 = build(mesh2)
+    restored = store.restore(ckdir, 2, s, shardings=st_sh2)
+    # bitwise identical params after the re-shard
+    for a, c in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    dp2 = S.batch_axes(mesh2, 4)
+    with mesh2, actx.activation_sharding(mesh2, dp2):
+        b2 = jax.device_put(batch, b_sh2)
+        s2, m2 = step2(restored, b2)
+        s2, m2 = step2(s2, jax.device_put(batch, b_sh2))
+    assert np.isfinite(float(m2["loss"]))
+
+    # ---- determinism check: same continuation on the original mesh ----
+    with mesh1, actx.activation_sharding(mesh1, dp1):
+        r1 = store.restore(ckdir, 2, s, shardings=st_sh1)
+        c1, n1 = step1(r1, jax.device_put(batch, b_sh1))
+        c1, n1 = step1(c1, jax.device_put(batch, b_sh1))
+    np.testing.assert_allclose(float(n1["loss"]), float(m2["loss"]),
+                               rtol=1e-5, atol=1e-6)
+    print("OK elastic re-mesh restore + continue")
+""")
+
+
+@pytest.mark.slow
+def test_elastic_remesh_restore():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO}/src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "OK elastic re-mesh restore + continue" in r.stdout

@@ -1,0 +1,175 @@
+"""Unit tests for the HLO roofline analyzer on synthetic HLO text:
+trip-count multipliers, ring-factor byte accounting, and the wire-dtype
+correction rules (movement vs reduction collectives, fusion interiors)."""
+
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _analyze(hlo, n=8):
+    return H.analyze_hlo(hlo, n)
+
+
+def test_trip_count_multiplier_scales_dot_flops():
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %y = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %y)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> (s32[], f32[8,8]) {
+  %a = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%z, %a)
+  ROOT %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+}
+"""
+    stats = _analyze(hlo)
+    # one 8x8x8 dot per trip, 12 trips
+    assert stats.dot_flops == pytest.approx(12 * 2 * 8 * 8 * 8)
+    assert stats.max_trip == 12
+
+
+def test_allreduce_ring_factor_and_no_correction_for_f32():
+    hlo = """
+HloModule m
+
+ENTRY %main (g: f32[1024]) -> f32[1024] {
+  %g = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%g), replica_groups=[1,8]<=[8], to_apply=%add
+}
+"""
+    stats = _analyze(hlo, n=8)
+    expected = 2 * (8 - 1) / 8 * 1024 * 4
+    assert stats.collective_bytes == pytest.approx(expected)
+    assert stats.collective_bytes_raw == pytest.approx(expected)
+
+
+def test_movement_collective_consumer_narrowing():
+    """all-gather(f32) whose only consumer converts to bf16 counts at bf16
+    (TPU CollectiveQuantizer sinks the convert into the gather)."""
+    hlo = """
+HloModule m
+
+ENTRY %main (w: f32[128,64]) -> bf16[1024,64] {
+  %w = f32[128,64]{1,0} parameter(0)
+  %ag = f32[1024,64]{1,0} all-gather(%w), replica_groups=[1,8]<=[8], dimensions={0}
+  ROOT %c = bf16[1024,64]{1,0} convert(%ag)
+}
+"""
+    stats = _analyze(hlo, n=8)
+    raw = (8 - 1) / 8 * 1024 * 64 * 4
+    assert stats.collective_bytes_raw == pytest.approx(raw)
+    assert stats.collective_bytes == pytest.approx(raw / 2)
+
+
+def test_reduction_needs_both_sides_narrow():
+    """all-reduce narrowed ONLY under the normalization sandwich
+    (bf16 producer AND bf16 consumer); f32-produced grads stay f32."""
+    sandwich = """
+HloModule m
+
+ENTRY %main (x: bf16[256]) -> bf16[256] {
+  %x = bf16[256]{0} parameter(0)
+  %up = f32[256]{0} convert(%x)
+  %ar = f32[256]{0} all-reduce(%up), replica_groups=[1,8]<=[8], to_apply=%add
+  ROOT %dn = bf16[256]{0} convert(%ar)
+}
+"""
+    stats = _analyze(sandwich, n=8)
+    raw = 2 * (8 - 1) / 8 * 256 * 4
+    assert stats.collective_bytes_raw == pytest.approx(raw)
+    assert stats.collective_bytes == pytest.approx(raw / 2)
+
+    one_sided = """
+HloModule m
+
+ENTRY %main (x: f32[256]) -> bf16[256] {
+  %x = f32[256]{0} parameter(0)
+  %ar = f32[256]{0} all-reduce(%x), replica_groups=[1,8]<=[8], to_apply=%add
+  ROOT %dn = bf16[256]{0} convert(%ar)
+}
+"""
+    stats = _analyze(one_sided, n=8)
+    assert stats.collective_bytes == pytest.approx(raw)   # NOT narrowed
+
+
+def test_int8_producer_detected_through_fusion():
+    """all-gather over a value produced by an int8-slicing fusion counts at
+    1 byte (the scan-carried wire pairs)."""
+    hlo = """
+HloModule m
+
+%slicer (p0: s8[32,16,64], p1: s32[]) -> s8[16,64] {
+  %p0 = s8[32,16,64]{2,1,0} parameter(0)
+  %p1 = s32[] parameter(1)
+  %ds = s8[1,16,64]{2,1,0} dynamic-slice(%p0, %p1), dynamic_slice_sizes={1,16,64}
+  ROOT %r = s8[16,64]{2,1,0} reshape(%ds)
+}
+
+ENTRY %main (q: s8[32,16,64], i: s32[]) -> s8[128,64] {
+  %q = s8[32,16,64]{2,1,0} parameter(0)
+  %i = s32[] parameter(1)
+  %sl = s8[16,64]{2,1,0} fusion(%q, %i), kind=kLoop, calls=%slicer
+  ROOT %ag = s8[128,64]{1,0} all-gather(%sl), replica_groups=[1,8]<=[8], dimensions={0}
+}
+"""
+    stats = _analyze(hlo, n=8)
+    expected = (8 - 1) / 8 * 128 * 64 * 1
+    assert stats.collective_bytes == pytest.approx(expected)
+
+
+def test_fusion_interior_convert_detected():
+    """CPU FloatNormalization hides f32<->bf16 pairs inside fusions; the
+    interior convert sets the payload dtype."""
+    hlo = """
+HloModule m
+
+%sandwich (p0: f32[512,64]) -> f32[512,64] {
+  %p0 = f32[512,64]{1,0} parameter(0)
+  %dn = bf16[512,64]{1,0} convert(%p0)
+  ROOT %up = f32[512,64]{1,0} convert(%dn)
+}
+
+ENTRY %main (w: f32[64,64]) -> f32[512,64] {
+  %w = f32[64,64]{1,0} parameter(0)
+  %ag = f32[512,64]{1,0} all-gather(%w), replica_groups=[1,8]<=[8], dimensions={0}
+  ROOT %f = f32[512,64]{1,0} fusion(%ag), kind=kLoop, calls=%sandwich
+}
+"""
+    stats = _analyze(hlo, n=8)
+    raw = (8 - 1) / 8 * 512 * 64 * 4
+    assert stats.collective_bytes_raw == pytest.approx(raw)
+    assert stats.collective_bytes == pytest.approx(raw / 2)
+
+
+def test_dot_result_bytes_consumer_narrowed():
+    hlo = """
+HloModule m
+
+ENTRY %main (x: bf16[128,128], w: bf16[128,128]) -> bf16[128,128] {
+  %x = bf16[128,128]{1,0} parameter(0)
+  %w = bf16[128,128]{1,0} parameter(1)
+  %d = f32[128,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %c = bf16[128,128]{1,0} convert(%d)
+}
+"""
+    stats = _analyze(hlo, n=8)
+    # operands bf16 (2 x 128*128*2) + result narrowed to bf16
+    assert stats.dot_bytes == pytest.approx(3 * 128 * 128 * 2)
+    assert stats.dot_flops == pytest.approx(2 * 128 ** 3)

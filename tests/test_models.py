@@ -1,0 +1,174 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step asserting output shapes + no NaNs, decode consistency, and the photonic
+MAC numerics as a model feature."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.models import model as M
+
+
+def _batch(cfg, b=2, s=64, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    if cfg.mrope:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, None], (3, b, s))
+    if cfg.frontend == "vision":
+        batch["pixel_embeds"] = jax.random.normal(key, (b, 16, cfg.d_model))
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jax.random.normal(key, (b, s // 4, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_arch_smoke_forward_and_grad(arch):
+    cfg = C.get_reduced(arch)
+    params, specs = M.init(cfg, jax.random.PRNGKey(0))
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda x: x is None or isinstance(x, tuple))
+    batch = _batch(cfg)
+    logits = M.train_logits(cfg, params, batch)
+    assert logits.shape == (2, 64, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_arch_decode_step(arch):
+    cfg = C.get_reduced(arch)
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 32
+    batch = {k: v for k, v in _batch(cfg, b, s).items() if k != "labels"}
+    batch.pop("pixel_embeds", None)
+    logits, cache = M.prefill(cfg, params, batch, cache_len=s + 4)
+    assert logits.shape == (b, 1, cfg.vocab)
+    enc_out = (M.encode(cfg, params, batch["enc_embeds"])
+               if cfg.encoder_layers else None)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    lg, cache = M.serve_step(cfg, params, cache, tok, jnp.int32(s), enc_out=enc_out)
+    assert lg.shape == (b, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "gemma3_27b", "xlstm_350m",
+                                  "zamba2_1p2b", "seamless_m4t_medium"])
+def test_decode_matches_forward(arch):
+    cfg = C.get_reduced(arch)
+    params, _ = M.init(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 33
+    batch = _batch(cfg, b, s, jax.random.PRNGKey(2))
+    full = M.train_logits(cfg, params, batch)[:, -1]
+    pfb = {k: (v[:, :s - 1] if k == "tokens" else
+               (v[..., :s - 1] if k == "positions" else v))
+           for k, v in batch.items() if k not in ("labels", "pixel_embeds")}
+    _, cache = M.prefill(cfg, params, pfb, cache_len=s)
+    enc_out = (M.encode(cfg, params, batch["enc_embeds"])
+               if cfg.encoder_layers else None)
+    lg, _ = M.serve_step(cfg, params, cache, batch["tokens"][:, s - 1:s],
+                         jnp.int32(s - 1), enc_out=enc_out)
+    rel = float(jnp.max(jnp.abs(full - lg[:, 0]))) / float(jnp.max(jnp.abs(full)))
+    assert rel < 2e-2, rel
+
+
+def test_moe_decode_matches_forward_nodrop():
+    """MoE decode equals full forward when capacity dropping is disabled
+    (capacity drops legitimately differ between train and serve schedules)."""
+    cfg = dataclasses.replace(C.get_reduced("mixtral_8x7b"), capacity_factor=8.0)
+    params, _ = M.init(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 33
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab)
+    full = M.train_logits(cfg, params, {"tokens": toks})[:, -1]
+    _, cache = M.prefill(cfg, params, {"tokens": toks[:, :s - 1]}, cache_len=s)
+    lg, _ = M.serve_step(cfg, params, cache, toks[:, s - 1:s], jnp.int32(s - 1))
+    rel = float(jnp.max(jnp.abs(full - lg[:, 0]))) / float(jnp.max(jnp.abs(full)))
+    assert rel < 2e-2, rel
+
+
+@pytest.mark.parametrize("arch", ["mixtral_8x7b", "grok1_314b"])
+def test_moe_index_dispatch_matches_einsum(arch):
+    """The gather/scatter MoE dispatch must reproduce the GShard one-hot
+    einsum path exactly (same capacity-drop rule), values and gradients."""
+    cfg_e = dataclasses.replace(C.get_reduced(arch), moe_dispatch="einsum")
+    cfg_i = dataclasses.replace(cfg_e, moe_dispatch="index")
+    params, _ = M.init(cfg_e, jax.random.PRNGKey(0))
+    batch = _batch(cfg_e, 2, 64)
+
+    le, ge = jax.value_and_grad(lambda p: M.loss_fn(cfg_e, p, batch)[0])(params)
+    li, gi = jax.value_and_grad(lambda p: M.loss_fn(cfg_i, p, batch)[0])(params)
+    assert abs(float(le) - float(li)) < 2e-4, (float(le), float(li))
+    for a, b in zip(jax.tree.leaves(ge), jax.tree.leaves(gi)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-4)
+
+
+def test_sliding_window_cache_rolls():
+    """Decoding past the window must roll the cache, matching full forward."""
+    cfg = C.get_reduced("mixtral_8x7b")          # window=32 reduced
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    b, s = 1, 40                                  # prompt shorter than window
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s + 8), 0, cfg.vocab)
+    _, cache = M.prefill(cfg, params, {"tokens": toks[:, :s]}, cache_len=s + 8)
+    # decode 8 steps past the 32-token window
+    for i in range(8):
+        lg, cache = M.serve_step(cfg, params, cache, toks[:, s + i:s + i + 1],
+                                 jnp.int32(s + i))
+    full = M.train_logits(cfg, params, {"tokens": toks})[:, -1]
+    rel = float(jnp.max(jnp.abs(full - lg[:, 0]))) / float(jnp.max(jnp.abs(full)))
+    assert rel < 2e-2, rel
+
+
+def test_photonic_mac_model_trains():
+    """QAT path: a tiny model with photonic-MAC numerics still reduces loss."""
+    cfg = dataclasses.replace(C.get_reduced("yi_6b"), use_photonic_mac=True,
+                              photonic_bits=8)
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 64)
+
+    @jax.jit
+    def step(p, lr=5e-2):
+        (loss, _), g = jax.value_and_grad(
+            lambda q: M.loss_fn(cfg, q, batch), has_aux=True)(p)
+        return loss, jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    losses = []
+    for _ in range(8):
+        loss, params = step(params)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_photonic_bits_ablation_monotone():
+    """Lower MR resolution (fewer bits) => larger quantization distortion of
+    the logits (2.5D-CrossLight precision/energy trade-off)."""
+    base = C.get_reduced("yi_6b")
+    params, _ = M.init(base, jax.random.PRNGKey(0))
+    batch = _batch(base, 2, 64)
+    exact = M.train_logits(base, params, batch)
+    errs = []
+    for bits in (8, 4, 2):
+        cfg = dataclasses.replace(base, use_photonic_mac=True, photonic_bits=bits)
+        q = M.train_logits(cfg, params, batch)
+        errs.append(float(jnp.mean(jnp.abs(q - exact))))
+    assert errs[0] < errs[1] < errs[2], errs
+
+
+def test_stage_layout_counts():
+    """Stage decomposition covers exactly n_layers for every arch."""
+    for arch in C.ARCH_IDS:
+        cfg = C.get(arch)
+        total = sum(rep * len(kinds) for rep, kinds in M.stages(cfg))
+        assert total == cfg.n_layers, (arch, total, cfg.n_layers)
