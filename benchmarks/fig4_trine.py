@@ -1,6 +1,10 @@
 """Paper Fig. 4: TRINE vs SPACX, SPRINT, Tree — interposer network power,
 latency, and energy over six CNN workloads, normalized to SPRINT.
 
+Evaluated through the batched sweep engine (core.sweep): one struct-of-arrays
+grid of the four topologies, all six workload traffics broadcast against it,
+every metric produced by a single jitted call.
+
 Validates the paper's qualitative claims:
   * TRINE: best latency and energy of all four networks,
   * TRINE laser power > SPACX and > Tree (multiple subnetwork overhead),
@@ -14,23 +18,46 @@ import json
 import time
 from pathlib import Path
 
+import numpy as np
+
 from repro.core import (
     CNN_WORKLOADS,
     NetworkParams,
     choose_subnetworks,
-    evaluate_network,
-    spacx_bus,
-    sprint_bus,
     tree_network,
     trine_network,
 )
+from repro.core.sweep import build_grid, evaluate_columns, network_columns
 
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+TOPOLOGIES = ("sprint", "spacx", "tree", "trine")
+
+
+def _display_names(nets) -> list:
+    ks = nets["n_laser_banks"]
+    by_key = {"sprint": "SPRINT", "spacx": "SPACX", "tree": "Tree"}
+    return [by_key.get(t, f"TRINE-{int(ks[j])}")
+            for j, t in enumerate(TOPOLOGIES)]
 
 
 def run(csv: bool = True) -> dict:
     p = NetworkParams()
-    nets = [sprint_bus(p), spacx_bus(p), tree_network(p), trine_network(p)]
+    grid = build_grid(TOPOLOGIES)          # paper defaults, one row/topology
+    nets = network_columns(grid)
+    names = _display_names(nets)
+
+    workloads = [factory() for factory in CNN_WORKLOADS.values()]
+    traffics = [wl.traffic() for wl in workloads]
+    bits = np.asarray([[t.total_bits] for t in traffics])        # (W, 1)
+    xfers = np.asarray([[t.n_transfers] for t in traffics])
+
+    evaluate_columns(nets, grid.cols, bits, xfers)  # warm the jit cache
+    t0 = time.perf_counter()
+    metrics = evaluate_columns(nets, grid.cols, bits, xfers)     # (W, topo)
+    n_cells = metrics["power_w"].size
+    us = (time.perf_counter() - t0) * 1e6 / max(1, n_cells)
+
     out = {
         "params": {
             "n_gateways": p.n_gateways,
@@ -41,28 +68,23 @@ def run(csv: bool = True) -> dict:
         },
         "rows": [],
     }
-    t0 = time.perf_counter()
-    for name, factory in CNN_WORKLOADS.items():
-        wl = factory()
-        traffic = wl.traffic()
-        reps = {n.name: evaluate_network(n, traffic) for n in nets}
-        base = reps["SPRINT"]
-        for k, r in reps.items():
+    base_j = names.index("SPRINT")
+    for wi, wl in enumerate(workloads):
+        for j, name in enumerate(names):
             out["rows"].append(
                 {
                     "cnn": wl.name,
-                    "network": k,
-                    "power_norm": r.power_w / base.power_w,
-                    "latency_norm": r.latency_s / base.latency_s,
-                    "energy_norm": r.energy_j / base.energy_j,
-                    "power_w": r.power_w,
-                    "latency_s": r.latency_s,
-                    "energy_j": r.energy_j,
-                    "laser_w": r.laser_power_w,
-                    "trimming_w": r.trimming_power_w,
+                    "network": name,
+                    "power_norm": metrics["power_w"][wi, j] / metrics["power_w"][wi, base_j],
+                    "latency_norm": metrics["latency_s"][wi, j] / metrics["latency_s"][wi, base_j],
+                    "energy_norm": metrics["energy_j"][wi, j] / metrics["energy_j"][wi, base_j],
+                    "power_w": metrics["power_w"][wi, j],
+                    "latency_s": metrics["latency_s"][wi, j],
+                    "energy_j": metrics["energy_j"][wi, j],
+                    "laser_w": metrics["laser_power_w"][wi, j],
+                    "trimming_w": metrics["trimming_power_w"][wi, j],
                 }
             )
-    us = (time.perf_counter() - t0) * 1e6 / max(1, len(out["rows"]))
 
     trine = [r for r in out["rows"] if r["network"].startswith("TRINE")]
     spacx = [r for r in out["rows"] if r["network"] == "SPACX"]

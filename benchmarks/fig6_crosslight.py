@@ -19,7 +19,7 @@ from repro.core import (
     CNN_WORKLOADS,
     crosslight_25d_elec,
     crosslight_25d_siph,
-    evaluate_accelerator,
+    evaluate_accelerator_batch,
     monolithic_crosslight,
 )
 
@@ -39,7 +39,9 @@ def run(csv: bool = True) -> dict:
     t0 = time.perf_counter()
     for name, factory in CNN_WORKLOADS.items():
         wl = factory()
-        reps = {a.name: evaluate_accelerator(a, wl) for a in accels}
+        # batched path: per-layer loop replaced by one struct-of-arrays
+        # evaluation per (accelerator, workload) — see core.sweep
+        reps = {a.name: evaluate_accelerator_batch(a, wl) for a in accels}
         m = reps["CrossLight"]
         e = reps["2.5D-CrossLight-Elec"]
         s = reps["2.5D-CrossLight-SiPh"]

@@ -4,6 +4,11 @@ and the MODEL_FLOPS/HLO_FLOPS useful-compute ratio.
 
 Reads benchmarks/artifacts/dryrun/*.json (produced by repro.launch.dryrun).
 Emits CSV rows for benchmarks.run and a markdown table for EXPERIMENTS.md.
+
+Also emits the photonic-accelerator roofline (paper Sec. V decomposition):
+per (accelerator variant x CNN) the compute / interposer-network / memory
+terms and the dominant bottleneck, computed through the batched sweep-engine
+accelerator path (core.sweep.evaluate_accelerator_batch).
 """
 
 from __future__ import annotations
@@ -11,6 +16,13 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
+from repro.core import (
+    CNN_WORKLOADS,
+    crosslight_25d_elec,
+    crosslight_25d_siph,
+    evaluate_accelerator_batch,
+    monolithic_crosslight,
+)
 from repro.launch.hlo_analysis import PEAK_FLOPS
 
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts" / "dryrun"
@@ -86,13 +98,53 @@ def markdown_table(mesh="single") -> str:
     return "\n".join(rows)
 
 
+def photonic_roofline() -> list:
+    """Per (accelerator variant x CNN): compute / network / memory seconds
+    and the dominant term, via the batched accelerator evaluator."""
+    accels = [monolithic_crosslight(), crosslight_25d_elec(),
+              crosslight_25d_siph()]
+    rows = []
+    for name, factory in CNN_WORKLOADS.items():
+        wl = factory()
+        for a in accels:
+            r = evaluate_accelerator_batch(a, wl)
+            terms = {"compute": r.compute_s, "network": r.network_s,
+                     "memory": r.memory_s}
+            rows.append({
+                "accel": a.name, "cnn": wl.name,
+                "compute_s": r.compute_s, "network_s": r.network_s,
+                "memory_s": r.memory_s, "latency_s": r.latency_s,
+                "bottleneck": max(terms, key=terms.get),
+            })
+    return rows
+
+
+def photonic_markdown_table(photonic=None) -> str:
+    rows = ["| accelerator | cnn | compute (ms) | network (ms) | memory (ms) "
+            "| bottleneck |",
+            "|---|---|---:|---:|---:|---|"]
+    for r in (photonic if photonic is not None else photonic_roofline()):
+        rows.append(
+            f"| {r['accel']} | {r['cnn']} | {r['compute_s'] * 1e3:.3f} | "
+            f"{r['network_s'] * 1e3:.3f} | {r['memory_s'] * 1e3:.3f} | "
+            f"**{r['bottleneck']}** |")
+    return "\n".join(rows)
+
+
 def run(csv: bool = True) -> dict:
     cells = load_cells()
     ok = [c for c in cells if c["status"] == "ok"]
     skip = [c for c in cells if c["status"] == "skip"]
     err = [c for c in cells if c["status"] not in ("ok", "skip")]
-    out = {"n_ok": len(ok), "n_skip": len(skip), "n_err": len(err)}
+    photonic = photonic_roofline()
+    out = {"n_ok": len(ok), "n_skip": len(skip), "n_err": len(err),
+           "photonic": photonic}
     if csv:
+        for r in photonic:
+            print(f"roofline/photonic/{r['accel']}/{r['cnn']},0,"
+                  f"cmp={r['compute_s'] * 1e3:.3f}ms;"
+                  f"net={r['network_s'] * 1e3:.3f}ms;"
+                  f"mem={r['memory_s'] * 1e3:.3f}ms;bot={r['bottleneck']}")
         for r in ok:
             s = summarize(r)
             cell = f"{s['arch']}/{s['shape']}/{s['mesh']}"
@@ -111,6 +163,8 @@ def run(csv: bool = True) -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    _out = run()
     print()
     print(markdown_table("single"))
+    print()
+    print(photonic_markdown_table(_out["photonic"]))

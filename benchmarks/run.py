@@ -17,6 +17,7 @@ jax.config.update("jax_enable_x64", True)
 
 from benchmarks import fig4_trine          # paper Fig. 4
 from benchmarks import fig6_crosslight     # paper Fig. 6
+from benchmarks import sweep_bench         # batched vs scalar sweep engine
 from benchmarks import collectives_bench   # Layer-B collective schedules
 from benchmarks import roofline            # §Roofline report
 from benchmarks import photonic_mac_bench  # kernel microbench
@@ -27,6 +28,8 @@ def main() -> None:
     fig4_trine.run()
     print("# fig6: CrossLight vs 2.5D-Elec vs 2.5D-SiPh (paper Fig. 6)")
     fig6_crosslight.run()
+    print("# sweep engine: batched vs scalar design-space throughput")
+    sweep_bench.run()
     print("# collective schedules: flat vs TRINE-hierarchical vs +int8")
     collectives_bench.run()
     print("# photonic-MAC kernel microbenchmark")

@@ -1,0 +1,110 @@
+"""Sweep-engine throughput benchmark: configs/sec of the scalar per-config
+dataclass loop vs the batched struct-of-arrays path (core.sweep), on the same
+design-space grid, plus an element-for-element output parity check.
+
+The acceptance bar for the batched engine is >= 20x configs/sec over the
+scalar loop on a >= 4096-point grid.  REPRO_SMOKE=1 shrinks the grid (and the
+scalar sample) so the CI smoke test finishes in a couple of seconds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import CNN_WORKLOADS
+from repro.core.sweep import sweep, sweep_scalar_reference
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+TOPOLOGIES = ("sprint", "spacx", "tree", "trine")
+
+# 4 topologies x 8 x 4 x 4 x 2 x 2 x 2 = 8192 configurations
+FULL_AXES = dict(
+    n_gateways=(8, 16, 24, 32, 40, 48, 56, 64),
+    n_lambda=(2, 4, 8, 16),
+    mem_bw_bytes_per_s=(25e9, 50e9, 100e9, 200e9),
+    modulation_rate_bps=(10e9, 12e9),
+    interposer_side_cm=(2.0, 4.0),
+)
+FULL_AXES["mzi.insertion_loss_db"] = (0.5, 1.0)
+
+# large enough that jit dispatch overhead doesn't swamp the batched path,
+# small enough that the scalar loop stays CI-cheap (~200 configs)
+SMOKE_AXES = dict(
+    n_gateways=(8, 16, 32, 64),
+    n_lambda=(2, 4, 8, 16),
+    mem_bw_bytes_per_s=(50e9, 100e9, 200e9),
+)
+
+SPEEDUP_BAR = 20.0
+SMOKE_SPEEDUP_BAR = 2.0
+
+
+def run(csv: bool = True, smoke: bool = None) -> dict:
+    if smoke is None:
+        smoke = os.environ.get("REPRO_SMOKE", "0").strip().lower() in (
+            "1", "true", "yes", "on")
+    axes = SMOKE_AXES if smoke else FULL_AXES
+    traffic = CNN_WORKLOADS["ResNet18"]().traffic()
+
+    # warm the jit cache so the batched timing is steady-state throughput
+    res = sweep(traffic, topologies=TOPOLOGIES, **axes)
+    n = res.grid.n
+
+    t0 = time.perf_counter()
+    res = sweep(traffic, topologies=TOPOLOGIES, **axes)
+    batched_s = time.perf_counter() - t0
+    batched_cps = n / batched_s
+
+    # scalar loop over the identical grid (subsampled axes in smoke mode only)
+    t0 = time.perf_counter()
+    ref = sweep_scalar_reference(traffic, topologies=TOPOLOGIES, **axes)
+    scalar_s = time.perf_counter() - t0
+    scalar_cps = n / scalar_s
+
+    speedup = batched_cps / scalar_cps
+    max_rel = max(
+        float(np.max(np.abs(res.metrics[k] - ref[k])
+                     / np.maximum(np.abs(ref[k]), 1e-30)))
+        for k in res.metrics)
+
+    bar = SMOKE_SPEEDUP_BAR if smoke else SPEEDUP_BAR
+    checks = {
+        "grid_at_least_4096": smoke or n >= 4096,
+        "speedup_over_bar": speedup >= bar,
+        "batched_matches_scalar": max_rel < 1e-4,
+    }
+    out = {
+        "n_configs": n,
+        "batched_s": batched_s,
+        "scalar_s": scalar_s,
+        "batched_configs_per_s": batched_cps,
+        "scalar_configs_per_s": scalar_cps,
+        "speedup": speedup,
+        "max_rel_err": max_rel,
+        "smoke": smoke,
+        "checks": checks,
+    }
+
+    ARTIFACTS.mkdir(exist_ok=True)
+    (ARTIFACTS / "sweep_bench.json").write_text(json.dumps(out, indent=2))
+
+    if csv:
+        print(f"sweep/batched,{batched_s * 1e6 / n:.2f},"
+              f"{batched_cps:,.0f} cfg/s over {n} configs")
+        print(f"sweep/scalar,{scalar_s * 1e6 / n:.2f},"
+              f"{scalar_cps:,.0f} cfg/s over {n} configs")
+        print(f"sweep/speedup,0,{speedup:.1f}x (bar {bar:.0f}x);"
+              f"max_rel_err={max_rel:.2e}")
+        for k, v in checks.items():
+            print(f"sweep/check/{k},0,{'PASS' if v else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -4,75 +4,108 @@ energy-delay-product-optimal configuration for each CNN workload — the
 quantitative version of the paper's 'tailor the subnetworks to the memory
 bandwidth' argument, plus the MR-resolution (photonic MAC bits) trade-off.
 
+All sections run on the batched sweep engine (repro.core.sweep): the grids
+below — including the closing full design-space search over thousands of
+configurations — are struct-of-arrays columns evaluated by one jitted call
+each, not per-config Python loops.
+
   PYTHONPATH=src python examples/photonic_design_space.py
+  REPRO_SMOKE=1 PYTHONPATH=src python examples/photonic_design_space.py  # tiny grids
 """
 
-import dataclasses
+import os
 
 import jax
 
-jax.config.update("jax_enable_x64", True)
+jax.config.update("jax_enable_x64", True)  # float64 sweep kernel, like run.py
 
-from repro.core import (
-    CNN_WORKLOADS, NetworkParams, choose_subnetworks, evaluate_network,
-    trine_network,
-)
+import numpy as np
+
+from repro.core import CNN_WORKLOADS, NetworkParams, choose_subnetworks
+from repro.core.sweep import sweep
+
+SMOKE = os.environ.get("REPRO_SMOKE", "0").strip().lower() in (
+    "1", "true", "yes", "on")
 
 
 def sweep_subnetworks():
     print("=" * 72)
     print("K-sweep: energy-delay product vs subnetwork count (ResNet18)")
-    p = NetworkParams()
-    wl = CNN_WORKLOADS["ResNet18"]()
-    t = wl.traffic()
-    kstar = choose_subnetworks(p)
-    best = None
-    for k in (1, 2, 4, 8, 16, 32):
-        net = trine_network(p, n_subnetworks=k)
-        r = evaluate_network(net, t)
-        edp = r.energy_j * r.latency_s
+    t = CNN_WORKLOADS["ResNet18"]().traffic()
+    kstar = choose_subnetworks(NetworkParams())
+    ks = (1, 2, 4, 8, 16, 32)
+    res = sweep(t, topologies=("trine",), n_subnetworks=ks)
+    edp = res.metrics["energy_j"] * res.metrics["latency_s"]
+    for i, k in enumerate(ks):
         tag = " <= paper's choice" if k == kstar else ""
-        print(f"  K={k:3d}: latency {r.latency_s*1e3:8.3f} ms  "
-              f"energy {r.energy_j*1e3:7.3f} mJ  EDP {edp*1e6:9.4f}{tag}")
-        if best is None or edp < best[1]:
-            best = (k, edp)
-    print(f"  EDP-optimal K = {best[0]} (bandwidth matching: K*={kstar})")
+        print(f"  K={k:3d}: latency {res.metrics['latency_s'][i] * 1e3:8.3f} ms  "
+              f"energy {res.metrics['energy_j'][i] * 1e3:7.3f} mJ  "
+              f"EDP {edp[i] * 1e6:9.4f}{tag}")
+    print(f"  EDP-optimal K = {ks[int(np.argmin(edp))]} (bandwidth matching: K*={kstar})")
 
 
 def sweep_wavelengths():
     print("=" * 72)
     print("WDM sweep: wavelengths/waveguide at fixed aggregate bandwidth")
-    wl = CNN_WORKLOADS["VGG16"]()
-    t = wl.traffic()
-    for n_lambda in (4, 8, 16):
-        p = NetworkParams(n_lambda=n_lambda)
-        net = trine_network(p)
-        r = evaluate_network(net, t)
-        print(f"  {n_lambda:2d} lambda x {net.n_laser_banks} subnets: "
-              f"loss {net.worst_path_loss_db:5.2f} dB, laser {r.laser_power_w*1e3:7.1f} mW, "
-              f"latency {r.latency_s*1e3:7.3f} ms, EPB {r.energy_per_bit_j*1e12:5.2f} pJ/bit")
+    t = CNN_WORKLOADS["VGG16"]().traffic()
+    lams = (4, 8, 16)
+    res = sweep(t, topologies=("trine",), n_lambda=lams)
+    for i, n_lambda in enumerate(lams):
+        print(f"  {n_lambda:2d} lambda x {int(res.nets['n_laser_banks'][i])} subnets: "
+              f"loss {res.nets['worst_path_loss_db'][i]:5.2f} dB, "
+              f"laser {res.metrics['laser_power_w'][i] * 1e3:7.1f} mW, "
+              f"latency {res.metrics['latency_s'][i] * 1e3:7.3f} ms, "
+              f"EPB {res.metrics['energy_per_bit_j'][i] * 1e12:5.2f} pJ/bit")
 
 
 def sweep_trimming_sensitivity():
     print("=" * 72)
     print("Device sensitivity: MR trimming power x2 / MZI loss x2 (TRINE)")
-    from repro.core import DEFAULT_DEVICES
-    from repro.core.devices import MRParams, MZIParams
-    wl = CNN_WORKLOADS["DenseNet121"]()
-    t = wl.traffic()
-    p = NetworkParams()
-    base = evaluate_network(trine_network(p), t)
-    d2 = DEFAULT_DEVICES.replace(mr=MRParams(tuning_power_w=550e-6))
-    r2 = evaluate_network(trine_network(p, d=d2), t, d2)
-    d3 = DEFAULT_DEVICES.replace(mzi=MZIParams(insertion_loss_db=2.0))
-    r3 = evaluate_network(trine_network(p, d=d3), t, d3)
-    print(f"  baseline      : {base.power_w*1e3:7.1f} mW, {base.energy_j*1e3:7.3f} mJ")
-    print(f"  2x trimming   : {r2.power_w*1e3:7.1f} mW, {r2.energy_j*1e3:7.3f} mJ")
-    print(f"  2x MZI loss   : {r3.power_w*1e3:7.1f} mW, {r3.energy_j*1e3:7.3f} mJ "
+    t = CNN_WORKLOADS["DenseNet121"]().traffic()
+    # device leaves are grid axes too: a 2x2 corner sweep in one call
+    res = sweep(t, topologies=("trine",),
+                **{"mr.tuning_power_w": (275e-6, 550e-6),
+                   "mzi.insertion_loss_db": (1.0, 2.0)})
+    p = res.metric("power_w")[0] * 1e3      # (tuning, mzi_loss)
+    e = res.metric("energy_j")[0] * 1e3
+    print(f"  baseline      : {p[0, 0]:7.1f} mW, {e[0, 0]:7.3f} mJ")
+    print(f"  2x trimming   : {p[1, 0]:7.1f} mW, {e[1, 0]:7.3f} mJ")
+    print(f"  2x MZI loss   : {p[0, 1]:7.1f} mW, {e[0, 1]:7.3f} mJ "
           f"(loss compounds per stage -> laser grows exponentially)")
+
+
+def sweep_full_design_space():
+    print("=" * 72)
+    topos = ("sprint", "spacx", "tree", "trine")
+    if SMOKE:
+        axes = dict(n_gateways=(16, 32), n_lambda=(4, 8))
+    else:
+        axes = dict(
+            n_gateways=(8, 16, 24, 32, 48, 64),
+            n_lambda=(2, 4, 8, 16),
+            mem_bw_bytes_per_s=(25e9, 50e9, 100e9, 200e9),
+            modulation_rate_bps=(8e9, 10e9, 12e9),
+            interposer_side_cm=(2.0, 3.0, 4.0),
+        )
+    n_grid = len(topos) * int(np.prod([len(v) for v in axes.values()]))
+    print(f"Full design-space search: {n_grid} configs/workload, batched")
+    for name in ("ResNet18", "VGG16") if not SMOKE else ("ResNet18",):
+        t = CNN_WORKLOADS[name]().traffic()
+        res = sweep(t, topologies=topos, **axes)
+        edp = res.metrics["energy_j"] * res.metrics["latency_s"]
+        i = int(np.argmin(edp))
+        cfg = res.config_at(i)
+        axes_str = ", ".join(
+            f"{k}={v:g}" for k, v in cfg.items() if k != "topology")
+        print(f"  {name:10s}: EDP-optimal {res.model_at(i).name:9s} "
+              f"({axes_str})")
+        print(f"  {'':10s}  latency {res.metrics['latency_s'][i] * 1e3:.3f} ms, "
+              f"energy {res.metrics['energy_j'][i] * 1e3:.3f} mJ, "
+              f"laser {res.metrics['laser_power_w'][i] * 1e3:.1f} mW")
 
 
 if __name__ == "__main__":
     sweep_subnetworks()
     sweep_wavelengths()
     sweep_trimming_sensitivity()
+    sweep_full_design_space()

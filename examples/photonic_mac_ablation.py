@@ -17,6 +17,7 @@ Run: PYTHONPATH=src python examples/photonic_mac_ablation.py
 """
 
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +30,12 @@ from repro.models import model as M
 from repro.optim import adamw
 from repro.runtime.trainer import make_train_step
 
-STEPS = 30
-BITS = (8, 6, 5, 4, 3, 2)
+# REPRO_SMOKE=1: one resolution, a few steps — the CI smoke-mode contract
+# shared with the benchmark layer (tests/test_benchmarks_smoke.py)
+_SMOKE = os.environ.get("REPRO_SMOKE", "0").strip().lower() in (
+    "1", "true", "yes", "on")
+STEPS = 4 if _SMOKE else 30
+BITS = (8,) if _SMOKE else (8, 6, 5, 4, 3, 2)
 
 
 def quant_error():

@@ -1,0 +1,55 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern ``jax.shard_map`` API (jax >= 0.6: top-level
+export, ``check_vma=``, ``axis_names=``).  On 0.4.x the callable lives at
+``jax.experimental.shard_map.shard_map`` with the older keyword surface
+(``check_rep=``, ``auto=``).  Import ``shard_map`` from here instead of from
+``jax`` so the suite runs on either line:
+
+    from repro.compat import shard_map
+
+The wrapper accepts the modern keywords everywhere and translates them for
+the experimental implementation:
+
+  check_vma=X   -> check_rep=X
+  axis_names=S  -> auto=frozenset(mesh.axis_names) - S   (manual-over-S)
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["shard_map", "JAX_HAS_NATIVE_SHARD_MAP"]
+
+
+def _resolve():
+    """Return (impl, is_modern).  Modern = accepts check_vma/axis_names."""
+    impl = getattr(jax, "shard_map", None)
+    if impl is not None:
+        return impl, True
+    from jax.experimental.shard_map import shard_map as impl  # jax 0.4.x
+    params = inspect.signature(impl).parameters
+    return impl, "check_vma" in params
+
+
+_IMPL, JAX_HAS_NATIVE_SHARD_MAP = _resolve()
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool = True, axis_names: Any = None, **kw):
+    """Version-portable ``shard_map`` (modern keyword surface)."""
+    if JAX_HAS_NATIVE_SHARD_MAP:
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return _IMPL(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_vma=check_vma, **kw)
+    # jax 0.4.x experimental surface: check_rep / auto
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _IMPL(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                 check_rep=check_vma, **kw)

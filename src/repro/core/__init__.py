@@ -34,5 +34,17 @@ from repro.core.accelerator import (
     crosslight_25d_elec,
     evaluate_accelerator,
 )
+# NOTE: the `sweep` *function* is deliberately not re-exported here — it
+# would shadow the `repro.core.sweep` submodule attribute on the package.
+# Use `from repro.core.sweep import sweep`.
+from repro.core.sweep import (
+    SweepGrid,
+    SweepResult,
+    build_grid,
+    network_columns,
+    evaluate_columns,
+    sweep_scalar_reference,
+    evaluate_accelerator_batch,
+)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -21,7 +21,9 @@ for the 2.5D win (the other being the high-bandwidth photonic interposer).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.core.devices import DeviceLibrary, DEFAULT_DEVICES
 from repro.core.power import Traffic, evaluate_network, NetworkReport
@@ -125,6 +127,32 @@ def crosslight_25d_elec(d: Optional[DeviceLibrary] = None,
         network=electrical_mesh(p, d),
         mem_bw_bytes_per_s=p.n_mem_chiplets * p.mem_bw_bytes_per_s,
     )
+
+
+# --------------------------------------------------------------------------
+# Struct-of-arrays flattening (consumed by core.sweep's batched evaluator)
+# --------------------------------------------------------------------------
+
+def layer_columns(wl: Workload) -> Dict[str, np.ndarray]:
+    """Workload layers as float64 columns, one row per layer."""
+    def col(get):
+        return np.asarray([get(l) for l in wl.layers], np.float64)
+
+    return {
+        "dot_length": col(lambda l: l.dot_length),
+        "n_dots": col(lambda l: l.n_dots),
+        "weight_bytes": col(lambda l: l.weight_bytes),
+        "in_bytes": col(lambda l: l.in_bytes),
+        "out_bytes": col(lambda l: l.out_bytes),
+    }
+
+
+def chiplet_columns(accel: AcceleratorConfig) -> Dict[str, np.ndarray]:
+    """Chiplet mix as float64 columns, one row per chiplet."""
+    return {
+        "n_units": np.asarray([c.n_units for c in accel.chiplets], np.float64),
+        "vector_size": np.asarray([c.vector_size for c in accel.chiplets], np.float64),
+    }
 
 
 # --------------------------------------------------------------------------

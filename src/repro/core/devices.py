@@ -194,6 +194,39 @@ class DeviceLibrary:
 DEFAULT_DEVICES = DeviceLibrary()
 
 
+def device_columns(d: Optional[DeviceLibrary] = None) -> dict:
+    """Flatten a DeviceLibrary to ``{"mr.through_loss_db": 0.02, ...}``.
+
+    The dotted leaf names are the sweep engine's device-axis vocabulary: any
+    of them can be turned into a grid dimension (`core.sweep.build_grid`),
+    and `replace_device_leaves` maps a row of such columns back to a concrete
+    DeviceLibrary for the scalar reference path.
+    """
+    d = d or DEFAULT_DEVICES
+    cols = {}
+    for group in dataclasses.fields(d):
+        rec = getattr(d, group.name)
+        for leaf in dataclasses.fields(rec):
+            v = getattr(rec, leaf.name)
+            if isinstance(v, (int, float)):
+                cols[f"{group.name}.{leaf.name}"] = float(v)
+    return cols
+
+
+def replace_device_leaves(d: DeviceLibrary, leaves: dict) -> DeviceLibrary:
+    """Rebuild a DeviceLibrary with dotted-name overrides applied."""
+    by_group: dict = {}
+    for dotted, value in leaves.items():
+        group, leaf = dotted.split(".", 1)
+        by_group.setdefault(group, {})[leaf] = value
+    repl = {}
+    for group, kv in by_group.items():
+        rec = getattr(d, group)
+        cast = {k: type(getattr(rec, k))(v) for k, v in kv.items()}
+        repl[group] = dataclasses.replace(rec, **cast)
+    return dataclasses.replace(d, **repl) if repl else d
+
+
 def laser_electrical_power_w(
     path_loss_db,
     n_wavelengths,

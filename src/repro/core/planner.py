@@ -25,8 +25,28 @@ from __future__ import annotations
 import math
 from typing import TYPE_CHECKING
 
+import numpy as np
+
+__all__ = [
+    "choose_subnetworks", "choose_subnetworks_arr",
+    "plan_gateway_activation", "plan_gateway_activation_arr",
+    "plan_collective_channels",
+]
+
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.topology import NetworkParams
+
+
+def choose_subnetworks_arr(n_lambda, modulation_rate_bps, n_mem_chiplets,
+                           mem_bw_bytes_per_s, n_gateways):
+    """Vectorized K*: elementwise over struct-of-arrays parameter columns
+    (the sweep-engine path; `choose_subnetworks` is the scalar wrapper)."""
+    wg_bw = np.asarray(n_lambda, np.float64) * np.asarray(modulation_rate_bps, np.float64)
+    mem_bw = np.asarray(n_mem_chiplets, np.float64) * np.asarray(mem_bw_bytes_per_s, np.float64) * 8.0
+    k = np.maximum(1.0, np.ceil(mem_bw / wg_bw))
+    # power-of-two so subnet trees stay balanced (paper uses 8)
+    k_pow2 = 2.0 ** np.round(np.log2(k))
+    return np.minimum(k_pow2, np.asarray(n_gateways, np.float64))
 
 
 def choose_subnetworks(p: "NetworkParams") -> int:
@@ -40,12 +60,20 @@ def choose_subnetworks(p: "NetworkParams") -> int:
     the maximum bandwidth offered by memory chiplets").  We reproduce the
     paper's choice: round to the nearest power of two <= gateway count.
     """
-    wg_bw = p.n_lambda * p.modulation_rate_bps
-    mem_bw = p.n_mem_chiplets * p.mem_bw_bytes_per_s * 8.0
-    k = max(1, math.ceil(mem_bw / wg_bw))
-    # power-of-two so subnet trees stay balanced (paper uses 8)
-    k_pow2 = 2 ** round(math.log2(k))
-    return int(min(k_pow2, p.n_gateways))
+    return int(choose_subnetworks_arr(
+        p.n_lambda, p.modulation_rate_bps, p.n_mem_chiplets,
+        p.mem_bw_bytes_per_s, p.n_gateways))
+
+
+def plan_gateway_activation_arr(demand_bytes_per_s, max_bw_bytes_per_s,
+                                n_gateways):
+    """Vectorized PCMC gateway-activation fraction (sweep/batched path)."""
+    demand = np.asarray(demand_bytes_per_s, np.float64)
+    maxbw = np.asarray(max_bw_bytes_per_s, np.float64)
+    n = np.asarray(n_gateways, np.float64)
+    frac = np.clip(demand / np.where(maxbw > 0, maxbw, np.inf), 0.0, 1.0)
+    steps = np.maximum(1.0, np.ceil(frac * n))
+    return np.where(maxbw > 0, steps / n, 1.0)
 
 
 def plan_gateway_activation(
@@ -58,11 +86,8 @@ def plan_gateway_activation(
     fraction in {1/n, 2/n, ..., 1}.  Deactivated gateways are power-gated and
     their PCMC couplers divert laser power (laser scales with the fraction).
     """
-    if max_bw_bytes_per_s <= 0:
-        return 1.0
-    frac = min(1.0, max(0.0, demand_bytes_per_s / max_bw_bytes_per_s))
-    steps = max(1, math.ceil(frac * n_gateways))
-    return steps / n_gateways
+    return float(plan_gateway_activation_arr(
+        demand_bytes_per_s, max_bw_bytes_per_s, n_gateways))
 
 
 def plan_collective_channels(

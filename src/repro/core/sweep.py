@@ -1,0 +1,421 @@
+"""Vectorized design-space sweep engine for the interposer-network models.
+
+The paper's headline figures come from sweeping network configurations across
+gateways / wavelengths / modulation rates / device corners.  The scalar
+dataclass path (`NetworkParams` -> `NetworkModel` -> `evaluate_network`)
+evaluates one configuration per Python call; this module flattens whole
+parameter grids into struct-of-arrays columns and evaluates every metric the
+power model produces — laser, trimming, latency, energy, energy-per-bit — for
+10k+ configurations in one jitted call.
+
+Pipeline:
+
+  build_grid(...)          cartesian product of a topology axis, any
+                           NetworkParams field, any dotted DeviceLibrary leaf
+                           ("mzi.insertion_loss_db", ...), and the TRINE
+                           "n_subnetworks" override -> SweepGrid of float64
+                           columns.
+  network_columns(grid)    struct-of-arrays NetworkModel fields, via the
+                           columnar topology kernels in core.topology.
+  evaluate_columns(...)    the jitted batched power/latency/energy kernel
+                           (mirrors power.evaluate_network branch-free).
+  sweep(traffic, ...)      all of the above in one call -> SweepResult.
+
+`sweep_scalar_reference` walks the identical grid through the scalar
+dataclass path one row at a time; it is the golden reference the parity tests
+(and benchmarks/sweep_bench.py) compare the batched engine against.
+
+`evaluate_accelerator_batch` is the same treatment for the Fig. 6 accelerator
+model: all layers of a workload evaluated as one batch instead of a Python
+loop per layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.devices import (
+    DeviceLibrary,
+    DEFAULT_DEVICES,
+    device_columns,
+    replace_device_leaves,
+)
+from repro.core.topology import (
+    MODEL_FIELDS,
+    PARAM_FIELDS,
+    TOPOLOGIES,
+    TOPOLOGY_ARRAYS,
+    NetworkParams,
+    model_from_row,
+)
+from repro.core.planner import plan_gateway_activation_arr
+from repro.core.power import Traffic, evaluate_network
+from repro.core.workloads import Workload
+from repro.core.accelerator import (
+    AccelReport,
+    AcceleratorConfig,
+    chiplet_columns,
+    layer_columns,
+)
+
+__all__ = [
+    "SweepGrid", "SweepResult", "build_grid", "network_columns",
+    "evaluate_columns", "sweep", "sweep_scalar_reference",
+    "evaluate_accelerator_batch", "METRIC_FIELDS", "DEFAULT_TOPOLOGIES",
+]
+
+DEFAULT_TOPOLOGIES: Tuple[str, ...] = ("sprint", "spacx", "tree", "trine", "elec")
+
+# int-typed NetworkParams fields (scalar-reference reconstruction)
+_INT_PARAM_FIELDS = frozenset({"n_gateways", "n_mem_chiplets", "n_lambda",
+                               "gateway_width_bits"})
+
+# metric columns emitted by the batched evaluator == NetworkReport fields
+METRIC_FIELDS = ("power_w", "latency_s", "energy_j", "energy_per_bit_j",
+                 "laser_power_w", "trimming_power_w")
+
+# device leaves the power kernel reads (the topology kernels read the rest)
+_EVAL_DEVICE_FIELDS = (
+    "pd.sensitivity_dbm", "pd.energy_per_bit_j",
+    "laser.power_margin_db", "laser.coupling_loss_db",
+    "laser.wall_plug_efficiency", "laser.bank_overhead_w",
+    "mr.tuning_power_w",
+    "mzi.static_power_w", "mzi.switch_energy_j",
+    "driver.energy_per_bit_j", "driver.serdes_energy_per_bit_j",
+    "elec.energy_per_bit_j", "elec.router_power_w",
+)
+
+
+# --------------------------------------------------------------------------
+# Grid construction
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGrid:
+    """A flattened cartesian parameter grid (struct-of-arrays columns).
+
+    axis order: ("topology", *axes) — `shape` follows it, every column and
+    `topo_id` is raveled to length `n = prod(shape)`.
+    """
+
+    topologies: Tuple[str, ...]
+    axes: Dict[str, Tuple[float, ...]]
+    cols: Dict[str, np.ndarray]
+    topo_id: np.ndarray
+    shape: Tuple[int, ...]
+
+    @property
+    def n(self) -> int:
+        return int(self.topo_id.size)
+
+    def row_params(self, i: int) -> NetworkParams:
+        kw = {}
+        for name in PARAM_FIELDS:
+            v = self.cols[name][i]
+            kw[name] = int(v) if name in _INT_PARAM_FIELDS else float(v)
+        return NetworkParams(**kw)
+
+    def row_devices(self, i: int,
+                    base: Optional[DeviceLibrary] = None) -> DeviceLibrary:
+        base = base or DEFAULT_DEVICES
+        swept = {k: float(self.cols[k][i]) for k in self.axes if "." in k}
+        return replace_device_leaves(base, swept) if swept else base
+
+    def row_topology(self, i: int) -> str:
+        return self.topologies[int(self.topo_id[i])]
+
+
+def build_grid(
+    topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
+    devices: Optional[DeviceLibrary] = None,
+    **axes: Sequence[float],
+) -> SweepGrid:
+    """Cartesian product of `topologies` x every keyword axis.
+
+    Axis names may be NetworkParams fields (``n_gateways=(16, 32, 64)``),
+    dotted DeviceLibrary leaves (``mzi.insertion_loss_db`` — pass via a dict
+    expansion since dots aren't identifiers: ``**{"mzi.insertion_loss_db":
+    (1.0, 2.0)}``), or ``n_subnetworks`` (TRINE K override; 0 = bandwidth-
+    matched auto).  Unswept columns take their NetworkParams/DeviceLibrary
+    defaults.
+    """
+    base: Dict[str, float] = {name: float(getattr(NetworkParams(), name))
+                              for name in PARAM_FIELDS}
+    base.update(device_columns(devices or DEFAULT_DEVICES))
+    base["n_subnetworks"] = 0.0
+
+    for name in axes:
+        if name not in base:
+            raise KeyError(
+                f"unknown sweep axis {name!r}; valid axes are NetworkParams "
+                f"fields, dotted device leaves, or 'n_subnetworks'")
+    unknown = [t for t in topologies if t not in TOPOLOGY_ARRAYS]
+    if unknown:
+        raise KeyError(f"unknown topologies {unknown!r}")
+
+    axes_vals = {k: tuple(float(x) for x in v) for k, v in axes.items()}
+    shape = (len(topologies),) + tuple(len(v) for v in axes_vals.values())
+    n = int(np.prod(shape))
+
+    topo_id = np.broadcast_to(
+        np.arange(len(topologies)).reshape((-1,) + (1,) * len(axes_vals)),
+        shape).ravel()
+
+    cols: Dict[str, np.ndarray] = {}
+    for name, v in base.items():
+        cols[name] = np.full(n, v, np.float64)
+    for ai, (name, vals) in enumerate(axes_vals.items()):
+        view = (1,) * (1 + ai) + (len(vals),) + (1,) * (len(axes_vals) - ai - 1)
+        cols[name] = np.broadcast_to(
+            np.asarray(vals, np.float64).reshape(view), shape).ravel().copy()
+
+    return SweepGrid(topologies=tuple(topologies), axes=axes_vals,
+                     cols=cols, topo_id=topo_id, shape=shape)
+
+
+def network_columns(grid: SweepGrid) -> Dict[str, np.ndarray]:
+    """Struct-of-arrays NetworkModel fields for every grid row."""
+    out = {f: np.zeros(grid.n, np.float64) for f in MODEL_FIELDS}
+    for ti, name in enumerate(grid.topologies):
+        mask = grid.topo_id == ti
+        sub = {k: v[mask] for k, v in grid.cols.items()}
+        fields = TOPOLOGY_ARRAYS[name](sub)
+        for f in MODEL_FIELDS:
+            out[f][mask] = fields[f]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Batched evaluation (the jitted kernel)
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def _eval_kernel(nets: Dict[str, jax.Array], dev: Dict[str, jax.Array],
+                 total_bits: jax.Array, n_transfers: jax.Array,
+                 active_fraction: jax.Array) -> Dict[str, jax.Array]:
+    """Branch-free batched mirror of `power.evaluate_network`: both the
+    photonic and the electrical formula evaluate on every lane, `is_electrical`
+    selects.  All inputs broadcast elementwise, so callers may batch over
+    configurations, workload traffics, or both at once."""
+    # ---- photonic ----
+    frac = jnp.clip(active_fraction, 1e-3, 1.0)
+    n_lambda_active = jnp.maximum(1.0, jnp.round(nets["n_wavelengths"] * frac))
+    n_banks_active = jnp.maximum(1.0, jnp.round(nets["n_laser_banks"] * frac))
+    p_tx_dbm = (dev["pd.sensitivity_dbm"] + dev["laser.power_margin_db"]
+                + nets["worst_path_loss_db"] + dev["laser.coupling_loss_db"])
+    per_lambda_w = 1e-3 * 10.0 ** (p_tx_dbm / 10.0)
+    laser_p = (n_lambda_active * per_lambda_w / dev["laser.wall_plug_efficiency"]
+               + n_banks_active * dev["laser.bank_overhead_w"])
+    trimming_p = nets["n_mr"] * dev["mr.tuning_power_w"] * frac
+    switch_p = nets["n_mzi"] * dev["mzi.static_power_w"] * frac
+    static_p = laser_p + trimming_p + switch_p
+
+    bw = nets["effective_bw_bps"] * frac
+    lat_ph = total_bits / bw + n_transfers * nets["per_transfer_s"]
+    per_bit = (dev["driver.energy_per_bit_j"]
+               + dev["driver.serdes_energy_per_bit_j"]
+               + dev["pd.energy_per_bit_j"])
+    dyn_e = total_bits * per_bit
+    switch_e = n_transfers * nets["n_stages"] * dev["mzi.switch_energy_j"]
+    energy_ph = static_p * lat_ph + dyn_e + switch_e
+    power_ph = static_p + (dyn_e + switch_e) / jnp.maximum(lat_ph, 1e-30)
+
+    # ---- electrical ----
+    lat_el = (total_bits / nets["effective_bw_bps"]
+              + n_transfers * nets["per_transfer_s"])
+    dyn_el = total_bits * dev["elec.energy_per_bit_j"] * nets["avg_hops"]
+    static_el = nets["n_routers"] * dev["elec.router_power_w"]
+    energy_el = dyn_el + static_el * lat_el
+    power_el = static_el + dyn_el / jnp.maximum(lat_el, 1e-30)
+
+    is_el = nets["is_electrical"] > 0
+    latency = jnp.where(is_el, lat_el, lat_ph)
+    energy = jnp.where(is_el, energy_el, energy_ph)
+    return {
+        "power_w": jnp.where(is_el, power_el, power_ph),
+        "latency_s": latency,
+        "energy_j": energy,
+        "energy_per_bit_j": energy / jnp.maximum(total_bits, 1.0),
+        "laser_power_w": jnp.where(is_el, 0.0, laser_p),
+        "trimming_power_w": jnp.where(is_el, 0.0, trimming_p),
+    }
+
+
+def _as_f64(x):
+    # float64 when jax_enable_x64 is on, float32 otherwise — jnp downcasts
+    return jnp.asarray(np.asarray(x, np.float64))
+
+
+def evaluate_columns(
+    nets: Mapping[str, np.ndarray],
+    cols: Mapping[str, np.ndarray],
+    total_bits,
+    n_transfers,
+    active_fraction=1.0,
+) -> Dict[str, np.ndarray]:
+    """Run the jitted batched evaluator over struct-of-arrays NetworkModel
+    fields.  `total_bits` / `n_transfers` / `active_fraction` broadcast
+    against the config axis (e.g. shape (W, 1) traffic x (N,) configs ->
+    (W, N) metrics)."""
+    nets_j = {k: _as_f64(nets[k]) for k in MODEL_FIELDS}
+    dev_j = {k: _as_f64(cols[k]) for k in _EVAL_DEVICE_FIELDS}
+    out = _eval_kernel(nets_j, dev_j, _as_f64(total_bits),
+                       _as_f64(n_transfers), _as_f64(active_fraction))
+    out = {k: np.asarray(v, np.float64) for k, v in out.items()}
+    # static-only metrics (laser, trimming) don't see the traffic operands;
+    # broadcast everything to the full (traffic x config) result shape
+    shape = np.broadcast_shapes(*(v.shape for v in out.values()))
+    return {k: np.broadcast_to(v, shape) for k, v in out.items()}
+
+
+# --------------------------------------------------------------------------
+# Top-level sweep API
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Metrics + model fields for every grid point (flat, length grid.n)."""
+
+    grid: SweepGrid
+    nets: Dict[str, np.ndarray]
+    metrics: Dict[str, np.ndarray]
+
+    def metric(self, name: str) -> np.ndarray:
+        """One metric reshaped to the grid's (topology, *axes) shape."""
+        return self.metrics[name].reshape(self.grid.shape)
+
+    def config_at(self, i: int) -> Dict[str, float]:
+        """Human-readable swept-axis settings of flat row `i`."""
+        out: Dict[str, float] = {"topology": self.grid.row_topology(i)}
+        for name in self.grid.axes:
+            out[name] = float(self.grid.cols[name][i])
+        return out
+
+    def best(self, name: str = "energy_j") -> Tuple[int, Dict[str, float]]:
+        """(flat index, swept-axis settings) of the metric's minimizer."""
+        i = int(np.argmin(self.metrics[name]))
+        return i, self.config_at(i)
+
+    def model_at(self, i: int):
+        """Scalar NetworkModel dataclass view of flat row `i`."""
+        key = self.grid.row_topology(i)
+        name = {"sprint": "SPRINT", "spacx": "SPACX", "tree": "Tree",
+                "elec": "ElecMesh"}.get(key)
+        if name is None:  # trine carries its subnetwork count
+            name = f"TRINE-{int(self.nets['n_laser_banks'][i])}"
+        return model_from_row(self.nets, name, i=i)
+
+
+def sweep(
+    traffic: Traffic,
+    topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
+    devices: Optional[DeviceLibrary] = None,
+    active_fraction: float = 1.0,
+    **axes: Sequence[float],
+) -> SweepResult:
+    """Evaluate one workload's traffic over a full configuration grid."""
+    grid = build_grid(topologies, devices=devices, **axes)
+    nets = network_columns(grid)
+    metrics = evaluate_columns(nets, grid.cols, traffic.total_bits,
+                               traffic.n_transfers, active_fraction)
+    return SweepResult(grid=grid, nets=nets, metrics=metrics)
+
+
+def sweep_scalar_reference(
+    traffic: Traffic,
+    topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
+    devices: Optional[DeviceLibrary] = None,
+    active_fraction: float = 1.0,
+    **axes: Sequence[float],
+) -> Dict[str, np.ndarray]:
+    """Golden reference: the identical grid walked through the scalar
+    dataclass path (`NetworkParams` -> topology factory -> `evaluate_network`)
+    one configuration per Python call.  Returns the same metric columns as
+    `sweep(...).metrics`."""
+    grid = build_grid(topologies, devices=devices, **axes)
+    base = devices or DEFAULT_DEVICES
+    out = {k: np.zeros(grid.n, np.float64) for k in METRIC_FIELDS}
+    for i in range(grid.n):
+        p = grid.row_params(i)
+        d = grid.row_devices(i, base)
+        name = grid.row_topology(i)
+        if name == "trine":
+            k = int(grid.cols["n_subnetworks"][i])
+            net = TOPOLOGIES[name](p, n_subnetworks=k or None, d=d)
+        else:
+            net = TOPOLOGIES[name](p, d=d)
+        rep = evaluate_network(net, traffic, d, active_fraction=active_fraction)
+        for key in METRIC_FIELDS:
+            out[key][i] = getattr(rep, key)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Batched accelerator evaluation (paper Fig. 6 path, one batch per workload)
+# --------------------------------------------------------------------------
+
+
+def evaluate_accelerator_batch(
+    accel: AcceleratorConfig,
+    wl: Workload,
+    devices: Optional[DeviceLibrary] = None,
+) -> AccelReport:
+    """Batched mirror of `accelerator.evaluate_accelerator`: the per-layer
+    Python loop becomes struct-of-arrays math over all layers at once, with
+    the network evaluated through the shared jitted kernel."""
+    d = devices or DEFAULT_DEVICES
+    lc = layer_columns(wl)
+    cc = chiplet_columns(accel)
+
+    # compute: layer split across chiplets by throughput for its dot length
+    passes = np.ceil(lc["dot_length"][:, None] / cc["vector_size"][None, :])
+    thr = cc["n_units"][None, :] * accel.mac_rate_hz / passes
+    total_thr = thr.sum(axis=1)
+    slots_best = (passes * cc["vector_size"][None, :]).min(axis=1)
+    c_s = lc["n_dots"] / total_thr
+    compute_energy = float(
+        (lc["n_dots"] * slots_best).sum() * accel.lambda_slot_energy_j)
+
+    bytes_total = lc["weight_bytes"] + lc["in_bytes"] + lc["out_bytes"]
+    total_bits = 8.0 * bytes_total
+    n_transfers = np.full_like(bytes_total, accel.transfers_per_layer)
+
+    net = accel.network
+    if accel.adaptive_gateways:
+        demand = bytes_total / np.maximum(c_s, 1e-12)
+        frac = plan_gateway_activation_arr(
+            demand, net.effective_bw_bps / 8.0,
+            max(1, net.n_wavelengths // 8))
+    else:
+        frac = np.ones_like(bytes_total)
+
+    nets = {f: np.float64(getattr(net, f)) for f in MODEL_FIELDS}
+    rep = evaluate_columns(nets, device_columns(d), total_bits, n_transfers,
+                           frac)
+
+    mem_s = bytes_total / accel.mem_bw_bytes_per_s
+    # double-buffered: network/memory overlap compute; layer pays the max
+    layer_lat = np.maximum(np.maximum(c_s, rep["latency_s"]), mem_s)
+    total_lat = float(layer_lat.sum())
+    net_energy = float(rep["energy_j"].sum())
+    bits_sum = float(total_bits.sum())
+    energy = compute_energy + net_energy
+    return AccelReport(
+        name=accel.name,
+        latency_s=total_lat,
+        power_w=energy / max(total_lat, 1e-30),
+        energy_j=energy,
+        epb_j=net_energy / max(bits_sum, 1.0),
+        compute_s=float(c_s.sum()),
+        network_s=float(rep["latency_s"].sum()),
+        memory_s=float(mem_s.sum()),
+        network_energy_j=net_energy,
+    )

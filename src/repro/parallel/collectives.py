@@ -27,7 +27,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.core.planner import plan_collective_channels as plan_channels  # re-export
 

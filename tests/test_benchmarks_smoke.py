@@ -1,0 +1,127 @@
+"""Benchmark / example entrypoint smoke tests: every benchmark `run()` and
+example script executes end-to-end in a tiny-grid smoke mode, so regressions
+in the benchmark/example layer break tier-1 instead of rotting silently.
+(The seed repo was red at import time for exactly this class of rot.)
+
+Benchmarks run in-process (they are analytical and fast).  Examples run as
+subprocesses with REPRO_SMOKE=1 and the smallest argument sets their CLIs
+accept — except serve_batched, whose reduced-model serve still compiles for
+minutes on this CPU container; its driver (repro.launch.serve / serve.engine)
+is exercised by tests/test_serving.py, so here it only gets a compile check.
+"""
+
+import os
+import py_compile
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+EXAMPLES = REPO / "examples"
+
+
+# ---------------------------------------------------------------------------
+# benchmarks (in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_fig4_benchmark_smoke():
+    import benchmarks.fig4_trine as b
+    out = b.run(csv=False)
+    assert len(out["rows"]) == 6 * 4
+    assert all(out["checks"].values()), out["checks"]
+
+
+def test_fig6_benchmark_smoke():
+    import benchmarks.fig6_crosslight as b
+    out = b.run(csv=False)
+    assert len(out["rows"]) == 6
+    assert all(out["checks"].values()), out["checks"]
+
+
+def test_sweep_bench_smoke():
+    import benchmarks.sweep_bench as b
+    out = b.run(csv=False, smoke=True)
+    assert out["checks"]["batched_matches_scalar"], out
+    assert out["checks"]["speedup_over_bar"], out
+    assert out["n_configs"] >= 128
+
+
+def test_roofline_benchmark_smoke():
+    import benchmarks.roofline as b
+    out = b.run(csv=False)
+    assert len(out["photonic"]) == 6 * 3
+    # the paper's qualitative Sec. V story: the SiPh interposer is never
+    # slower than the electrical mesh on the network term
+    by = {(r["accel"], r["cnn"]): r for r in out["photonic"]}
+    for name in ("ResNet18", "VGG16"):
+        assert (by[("2.5D-CrossLight-SiPh", name)]["network_s"]
+                <= by[("2.5D-CrossLight-Elec", name)]["network_s"])
+    assert b.photonic_markdown_table(out["photonic"]).count("|") > 20
+
+
+def test_collectives_benchmark_smoke():
+    import benchmarks.collectives_bench as b
+    out = b.run(csv=False)
+    assert out
+
+
+def test_photonic_mac_benchmark_smoke():
+    import benchmarks.photonic_mac_bench as b
+    out = b.run(csv=False)
+    assert out
+
+
+# ---------------------------------------------------------------------------
+# examples (subprocess, REPRO_SMOKE=1 + smallest CLI args)
+# ---------------------------------------------------------------------------
+
+
+def _run_example(script: str, *args: str, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    env["REPRO_SMOKE"] = "1"
+    r = subprocess.run(
+        [sys.executable, str(EXAMPLES / script), *args],
+        capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=str(REPO))
+    assert r.returncode == 0, (
+        f"{script} failed\n--- stdout ---\n{r.stdout[-2000:]}"
+        f"\n--- stderr ---\n{r.stderr[-2000:]}")
+    return r.stdout
+
+
+def test_example_photonic_design_space():
+    out = _run_example("photonic_design_space.py")
+    assert "EDP-optimal K = 8" in out
+    assert "EDP-optimal" in out.split("Full design-space search")[1]
+
+
+def test_example_quickstart():
+    out = _run_example("quickstart.py")
+    assert "TRINE" in out
+
+
+def test_example_train_e2e():
+    out = _run_example("train_e2e.py", "--steps", "2")
+    assert "final_step" in out or "loss" in out
+
+
+def test_example_continuous_batching():
+    out = _run_example("continuous_batching.py", "--requests", "2",
+                       "--slots", "2", "--max-len", "64")
+    assert "req" in out
+
+
+def test_example_photonic_mac_ablation():
+    out = _run_example("photonic_mac_ablation.py")
+    assert "photonic 8-bit" in out
+
+
+def test_example_serve_batched_compiles():
+    # full run compiles a reduced LM serve path for minutes on CPU; the
+    # driver itself is covered by tests/test_serving.py
+    py_compile.compile(str(EXAMPLES / "serve_batched.py"), doraise=True)

@@ -1,0 +1,155 @@
+"""Golden-value tests for the vectorized sweep engine (core.sweep): the
+batched struct-of-arrays path must match the scalar dataclass path
+element-for-element across sampled grids, for every topology, every metric,
+device-corner axes, PCMC activation fractions, traffic broadcasting, and the
+batched accelerator evaluator."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CNN_WORKLOADS,
+    NetworkParams,
+    Traffic,
+    crosslight_25d_elec,
+    crosslight_25d_siph,
+    evaluate_accelerator,
+    evaluate_accelerator_batch,
+    evaluate_network,
+    monolithic_crosslight,
+    trine_network,
+    tree_network,
+)
+from repro.core.sweep import (
+    DEFAULT_TOPOLOGIES,
+    METRIC_FIELDS,
+    build_grid,
+    evaluate_columns,
+    network_columns,
+    sweep,
+    sweep_scalar_reference,
+)
+
+TRAFFIC = Traffic(bytes_read=2e8, bytes_written=7e7, n_transfers=320)
+
+# the kernel is float32 unless jax_enable_x64; the scalar path is float64
+RTOL = 1e-4
+
+GRID_AXES = dict(
+    n_gateways=(8, 16, 32, 64),
+    n_lambda=(4, 8, 16),
+    mem_bw_bytes_per_s=(50e9, 100e9, 200e9),
+)
+
+
+def _assert_metrics_match(res, ref):
+    for k in METRIC_FIELDS:
+        np.testing.assert_allclose(res.metrics[k], ref[k], rtol=RTOL,
+                                   atol=0, err_msg=k)
+
+
+@pytest.mark.parametrize("topology", list(DEFAULT_TOPOLOGIES))
+def test_batched_matches_scalar_per_topology(topology):
+    """Element-for-element parity on a 36-point grid, per topology (bus,
+    tree, TRINE, electrical mesh)."""
+    res = sweep(TRAFFIC, topologies=(topology,), **GRID_AXES)
+    ref = sweep_scalar_reference(TRAFFIC, topologies=(topology,), **GRID_AXES)
+    assert res.grid.n == 36
+    _assert_metrics_match(res, ref)
+
+
+def test_batched_matches_scalar_device_axes():
+    """Dotted DeviceLibrary leaves are grid axes; parity must hold across
+    device corners too."""
+    axes = {"mzi.insertion_loss_db": (0.5, 1.0, 2.0),
+            "mr.tuning_power_w": (137e-6, 275e-6, 550e-6)}
+    res = sweep(TRAFFIC, topologies=("tree", "trine"), **axes)
+    ref = sweep_scalar_reference(TRAFFIC, topologies=("tree", "trine"), **axes)
+    _assert_metrics_match(res, ref)
+
+
+def test_batched_matches_scalar_subnetwork_override():
+    axes = dict(n_subnetworks=(1, 2, 4, 8, 16, 32))
+    res = sweep(TRAFFIC, topologies=("trine",), **axes)
+    ref = sweep_scalar_reference(TRAFFIC, topologies=("trine",), **axes)
+    _assert_metrics_match(res, ref)
+
+
+@pytest.mark.parametrize("frac", [0.4, 0.75, 1.0])
+def test_batched_matches_scalar_active_fraction(frac):
+    """PCMC gateway-activation fractions follow the identical rounding."""
+    res = sweep(TRAFFIC, topologies=("trine", "sprint"),
+                active_fraction=frac, n_lambda=(4, 8, 16))
+    ref = sweep_scalar_reference(TRAFFIC, topologies=("trine", "sprint"),
+                                 active_fraction=frac, n_lambda=(4, 8, 16))
+    _assert_metrics_match(res, ref)
+
+
+def test_traffic_broadcasting_matches_per_workload_calls():
+    """(W, 1)-shaped traffic against an (N,) config axis gives (W, N)
+    metrics equal to evaluating each workload separately."""
+    grid = build_grid(("sprint", "tree", "trine"), n_lambda=(4, 8))
+    nets = network_columns(grid)
+    traffics = [CNN_WORKLOADS[n]().traffic() for n in ("LeNet5", "ResNet18")]
+    bits = np.asarray([[t.total_bits] for t in traffics])
+    xfers = np.asarray([[t.n_transfers] for t in traffics])
+    both = evaluate_columns(nets, grid.cols, bits, xfers)
+    assert both["latency_s"].shape == (2, grid.n)
+    for wi, t in enumerate(traffics):
+        one = evaluate_columns(nets, grid.cols, t.total_bits, t.n_transfers)
+        for k in METRIC_FIELDS:
+            np.testing.assert_allclose(both[k][wi], one[k], rtol=1e-6,
+                                       err_msg=k)
+
+
+def test_model_at_equals_scalar_factory():
+    """A grid row reconstitutes to the identical NetworkModel dataclass the
+    scalar factory builds."""
+    res = sweep(TRAFFIC, topologies=("tree", "trine"))
+    p = NetworkParams()
+    assert res.model_at(0) == tree_network(p)
+    assert res.model_at(1) == trine_network(p)
+
+
+def test_scalar_row_reconstruction():
+    grid = build_grid(("trine",), n_gateways=(16, 64),
+                      **{"mzi.insertion_loss_db": (1.0, 2.0)})
+    p = grid.row_params(3)
+    assert isinstance(p.n_gateways, int) and p.n_gateways == 64
+    d = grid.row_devices(3)
+    assert d.mzi.insertion_loss_db == 2.0
+    assert d.mr == grid.row_devices(0).mr  # unswept leaves untouched
+
+
+def test_build_grid_rejects_unknown_axis_and_topology():
+    with pytest.raises(KeyError):
+        build_grid(("trine",), not_a_field=(1, 2))
+    with pytest.raises(KeyError):
+        build_grid(("warp-drive",))
+
+
+def test_spacx_rejects_subcluster_gateway_counts():
+    """g < 8 would mean zero SPACX clusters (zero bandwidth); both the
+    batched kernel and the scalar wrapper must fail loudly, not emit inf."""
+    with pytest.raises(ValueError):
+        sweep(TRAFFIC, topologies=("spacx",), n_gateways=(4,))
+    from repro.core import spacx_bus
+    with pytest.raises(ValueError):
+        spacx_bus(NetworkParams(n_gateways=4))
+
+
+@pytest.mark.parametrize("accel_factory", [
+    monolithic_crosslight, crosslight_25d_elec, crosslight_25d_siph])
+@pytest.mark.parametrize("wl_name", ["LeNet5", "ResNet18"])
+def test_accelerator_batch_matches_scalar(accel_factory, wl_name):
+    """The batched per-layer accelerator evaluation reproduces the scalar
+    layer loop for all three paper variants."""
+    accel = accel_factory()
+    wl = CNN_WORKLOADS[wl_name]()
+    a = evaluate_accelerator(accel, wl)
+    b = evaluate_accelerator_batch(accel, wl)
+    for f in ("latency_s", "power_w", "energy_j", "epb_j", "compute_s",
+              "network_s", "memory_s", "network_energy_j"):
+        assert getattr(b, f) == pytest.approx(getattr(a, f), rel=RTOL), f

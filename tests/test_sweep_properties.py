@@ -1,0 +1,72 @@
+"""Property-style parametrized invariants of the topology/power models,
+checked over sweep-engine grids (physics must hold at every grid point, not
+just the paper's operating point):
+
+  * effective_bw_bps <= aggregate_bw_bps (derating never creates bandwidth)
+  * worst-path loss monotonically non-decreasing in gateway count
+  * total network power positive, and increasing in n_lambda (photonic)
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Traffic
+from repro.core.sweep import build_grid, network_columns, sweep
+
+TRAFFIC = Traffic(bytes_read=1.5e8, bytes_written=5e7, n_transfers=200)
+
+GATEWAYS = (8, 16, 24, 32, 48, 64)
+LAMBDAS = (2, 4, 8, 16, 32)
+PHOTONIC = ("sprint", "spacx", "tree", "trine")
+ALL = PHOTONIC + ("elec",)
+
+
+@pytest.mark.parametrize("topology", ALL)
+def test_effective_bw_never_exceeds_aggregate(topology):
+    grid = build_grid((topology,), n_gateways=GATEWAYS, n_lambda=LAMBDAS)
+    nets = network_columns(grid)
+    assert np.all(nets["effective_bw_bps"] <= nets["aggregate_bw_bps"] * (1 + 1e-12))
+    assert np.all(nets["effective_bw_bps"] > 0)
+
+
+@pytest.mark.parametrize("topology", PHOTONIC)
+def test_worst_path_loss_monotone_in_gateways(topology):
+    """More gateways can never shorten the worst-case optical path: buses
+    accumulate ring through-loss per writer, trees add stages."""
+    grid = build_grid((topology,), n_gateways=GATEWAYS)
+    nets = network_columns(grid)
+    loss = nets["worst_path_loss_db"].reshape(grid.shape)[0]
+    assert np.all(loss > 0)
+    assert np.all(np.diff(loss) >= -1e-12)
+
+
+def test_bus_loss_strictly_increasing_in_gateways():
+    """For the MWMR bus specifically the growth is strict — the paper's core
+    argument against bus scale-out."""
+    grid = build_grid(("sprint",), n_gateways=GATEWAYS)
+    loss = network_columns(grid)["worst_path_loss_db"].reshape(grid.shape)[0]
+    assert np.all(np.diff(loss) > 0)
+
+
+@pytest.mark.parametrize("topology", PHOTONIC)
+def test_power_positive_and_increasing_in_lambda(topology):
+    """More lit wavelengths always cost power: laser scales with the lambda
+    count, trimming with the ring count.  TRINE's subnetwork count is pinned
+    (n_subnetworks=8) so the structure — not the planner's K — varies only
+    in n_lambda."""
+    kw = {"n_subnetworks": (8,)} if topology == "trine" else {}
+    res = sweep(TRAFFIC, topologies=(topology,), n_lambda=LAMBDAS, **kw)
+    power = res.metric("power_w")[0].squeeze()
+    assert power.shape == (len(LAMBDAS),)
+    assert np.all(power > 0)
+    assert np.all(np.diff(power) > 0)
+
+
+@pytest.mark.parametrize("topology", ALL)
+def test_all_metrics_finite_and_positive(topology):
+    res = sweep(TRAFFIC, topologies=(topology,),
+                n_gateways=GATEWAYS, n_lambda=LAMBDAS)
+    for key in ("power_w", "latency_s", "energy_j", "energy_per_bit_j"):
+        v = res.metrics[key]
+        assert np.all(np.isfinite(v)), key
+        assert np.all(v > 0), key
