@@ -1,11 +1,16 @@
 """Benchmark harness entry point — one function per paper table/figure plus
-the roofline report.  Prints ``name,us_per_call,derived`` CSV.
+the roofline report.  Prints ``name,us_per_call,derived`` CSV and writes a
+consolidated ``artifacts/summary.json`` with every benchmark's checks and
+the cross-benchmark perf-regression gates (batched >= 20x scalar, chunked
+within 1.5x of monolithic — smoke runs use each benchmark's recorded smoke
+bar).
 
   PYTHONPATH=src:. python -m benchmarks.run
 """
 
 from __future__ import annotations
 
+import json
 import sys
 from pathlib import Path
 
@@ -13,29 +18,90 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import jax
 
-jax.config.update("jax_enable_x64", True)
-
 from benchmarks import fig4_trine          # paper Fig. 4
 from benchmarks import fig6_crosslight     # paper Fig. 6
 from benchmarks import sweep_bench         # batched vs scalar sweep engine
+from benchmarks import pareto_bench        # Pareto/co-design search engine
 from benchmarks import collectives_bench   # Layer-B collective schedules
 from benchmarks import roofline            # §Roofline report
 from benchmarks import photonic_mac_bench  # kernel microbench
 
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def build_summary(results: dict) -> dict:
+    """Consolidate per-benchmark result dicts: flatten their checks and
+    evaluate the perf-regression gates.
+
+    Gates (each benchmark records the bar it actually ran against, so smoke
+    runs gate on the smoke bar and full runs on the full bar):
+      * sweep_bench:  batched configs/sec >= bar x scalar
+      * pareto_bench: chunked evaluation within bar x of monolithic (both
+        the network grid and the co-design grid), fronts exactly equal
+        between streaming and monolithic paths.
+    """
+    checks = {}
+    for name, res in results.items():
+        for k, v in (res.get("checks") or {}).items():
+            required = res.get("required_checks")
+            if required is not None and k not in required:
+                continue
+            checks[f"{name}/{k}"] = bool(v)
+
+    perf = {}
+    sweep_res = results.get("sweep")
+    if sweep_res:
+        perf["batched_over_scalar"] = {
+            "value": sweep_res["speedup"],
+            "bar": sweep_res["speedup_bar"],
+            "pass": sweep_res["speedup"] >= sweep_res["speedup_bar"],
+        }
+    pareto_res = results.get("pareto")
+    if pareto_res:
+        bar = pareto_res["ratio_bar"]
+        for section in ("network", "codesign"):
+            ratio = pareto_res[section]["chunked_over_monolithic"]
+            perf[f"chunked_over_monolithic_{section}"] = {
+                "value": ratio, "bar": bar, "pass": ratio <= bar}
+
+    ok = all(checks.values()) and all(p["pass"] for p in perf.values())
+    return {"checks": checks, "perf": perf, "pass": ok,
+            "benchmarks": results}
+
+
+def write_summary(results: dict) -> dict:
+    summary = build_summary(results)
+    ARTIFACTS.mkdir(exist_ok=True)
+    (ARTIFACTS / "summary.json").write_text(json.dumps(summary, indent=2))
+    return summary
+
 
 def main() -> None:
+    # set here, not at import: the smoke tests import this module in-process
+    # and a module-scope flip would leak float64 into the whole test run
+    jax.config.update("jax_enable_x64", True)
+    results = {}
     print("# fig4: TRINE vs SPACX/SPRINT/Tree (paper Fig. 4)")
-    fig4_trine.run()
+    results["fig4"] = fig4_trine.run()
     print("# fig6: CrossLight vs 2.5D-Elec vs 2.5D-SiPh (paper Fig. 6)")
-    fig6_crosslight.run()
+    results["fig6"] = fig6_crosslight.run()
     print("# sweep engine: batched vs scalar design-space throughput")
-    sweep_bench.run()
+    results["sweep"] = sweep_bench.run()
+    print("# pareto/co-design search: chunked vs monolithic vs scalar")
+    results["pareto"] = pareto_bench.run()
     print("# collective schedules: flat vs TRINE-hierarchical vs +int8")
-    collectives_bench.run()
+    results["collectives"] = collectives_bench.run()
     print("# photonic-MAC kernel microbenchmark")
-    photonic_mac_bench.run()
+    results["photonic_mac"] = photonic_mac_bench.run()
     print("# roofline (from dry-run artifacts)")
-    roofline.run()
+    results["roofline"] = roofline.run()
+
+    summary = write_summary(results)
+    print("# consolidated summary -> artifacts/summary.json")
+    for k, p in summary["perf"].items():
+        print(f"summary/perf/{k},0,{p['value']:.2f} vs bar {p['bar']} "
+              f"{'PASS' if p['pass'] else 'FAIL'}")
+    print(f"summary/pass,0,{'PASS' if summary['pass'] else 'FAIL'}")
 
 
 if __name__ == "__main__":

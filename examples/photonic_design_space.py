@@ -5,15 +5,18 @@ quantitative version of the paper's 'tailor the subnetworks to the memory
 bandwidth' argument, plus the MR-resolution (photonic MAC bits) trade-off.
 
 All sections run on the batched sweep engine (repro.core.sweep): the grids
-below — including the closing full design-space search over thousands of
-configurations — are struct-of-arrays columns evaluated by one jitted call
-each, not per-config Python loops.
+below are struct-of-arrays columns evaluated by jitted kernels, not
+per-config Python loops.  The closing sections use the search engine
+(repro.core.search): a streaming per-workload Pareto front over the full
+(topology x gateways x lambda x memory x rate x geometry) space — evaluated
+in fixed-size chunks so memory stays bounded no matter the grid size — a
+joint network x chiplet-mix co-design front, and jax.grad refinement of the
+best frontier point through the continuous columns.
 
   PYTHONPATH=src python examples/photonic_design_space.py
   REPRO_SMOKE=1 PYTHONPATH=src python examples/photonic_design_space.py  # tiny grids
 """
 
-import os
 
 import jax
 
@@ -21,11 +24,17 @@ jax.config.update("jax_enable_x64", True)  # float64 sweep kernel, like run.py
 
 import numpy as np
 
-from repro.core import CNN_WORKLOADS, NetworkParams, choose_subnetworks
-from repro.core.sweep import sweep
+from repro.core import CNN_WORKLOADS, ChipletSpec, NetworkParams, choose_subnetworks
+from repro.core.search import (
+    codesign_config_at,
+    codesign_pareto,
+    pareto_search,
+    refine_front_point,
+)
+from repro.core.sweep import grid_spec, sweep
+from repro.env import smoke_mode
 
-SMOKE = os.environ.get("REPRO_SMOKE", "0").strip().lower() in (
-    "1", "true", "yes", "on")
+SMOKE = smoke_mode()
 
 
 def sweep_subnetworks():
@@ -104,8 +113,88 @@ def sweep_full_design_space():
               f"laser {res.metrics['laser_power_w'][i] * 1e3:.1f} mW")
 
 
+def pareto_and_refine():
+    """Streaming Pareto frontier + gradient refinement (core.search)."""
+    print("=" * 72)
+    topos = ("sprint", "spacx", "tree", "trine")
+    if SMOKE:
+        axes = dict(n_gateways=(16, 32, 64), n_lambda=(4, 8))
+        chunk = 8
+    else:
+        axes = dict(
+            n_gateways=(8, 16, 24, 32, 40, 48, 56, 64),
+            n_lambda=(2, 4, 8, 16),
+            mem_bw_bytes_per_s=(25e9, 50e9, 100e9, 200e9),
+            modulation_rate_bps=(8e9, 10e9, 12e9),
+            interposer_side_cm=(2.0, 3.0, 4.0),
+        )
+        chunk = 4096
+    spec = grid_spec(topos, **axes)
+    names = ("ResNet18",) if SMOKE else ("ResNet18", "VGG16")
+    traffics = [CNN_WORKLOADS[n]().traffic() for n in names]
+    fronts = pareto_search(traffics, topologies=topos, chunk_size=chunk,
+                           **axes)
+    print(f"Streaming Pareto search: {spec.n} configs/workload in "
+          f"{chunk}-config chunks (bounded memory)")
+    for name, front in zip(names, fronts):
+        edp = front.points[:, 0] * front.points[:, 1]  # latency * energy
+        i = int(np.argmin(edp))
+        cfg = front.configs(spec)[i]
+        axes_str = ", ".join(f"{k}={v:g}" for k, v in cfg.items()
+                             if k != "topology")
+        print(f"  {name:10s}: {front.size:3d} frontier points; best-EDP "
+              f"{cfg['topology']} ({axes_str})")
+        print(f"  {'':10s}  latency {front.points[i, 0] * 1e3:.3f} ms, "
+              f"energy {front.points[i, 1] * 1e3:.3f} mJ, "
+              f"power {front.points[i, 2]:.2f} W")
+
+    # descend from the ResNet18 best-EDP point through the continuous axes
+    front = fronts[0]
+    edp = front.points[:, 0] * front.points[:, 1]
+    best = int(front.indices[int(np.argmin(edp))])
+    r = refine_front_point(spec, traffics[0], best,
+                           steps=8 if SMOKE else 48, lr=0.1)
+    moved = {k: f"{r['start'][k]:.3g}->{v:.3g}"
+             for k, v in r["refined"].items()
+             if abs(v - r["start"][k]) / r["start"][k] > 1e-3}
+    print(f"Gradient refinement (jax.grad through the {r['topology']} "
+          f"kernel): EDP {r['start_value']:.3e} -> {r['refined_value']:.3e} "
+          f"({100 * r['improvement']:.1f}% better)")
+    print(f"  moved axes: {moved or 'none (already locally optimal)'}")
+
+
+def codesign_search():
+    """Joint network x chiplet-mix frontier (paper Sec. V co-design)."""
+    print("=" * 72)
+    wl = CNN_WORKLOADS["ResNet18"]()
+    C = ChipletSpec
+    mixes = [
+        [C(512, 32)],                                      # homogeneous
+        [C(512, 9), C(512, 27), C(512, 49), C(512, 128)],  # paper Fig. 5
+        [C(256, 16), C(256, 64), C(256, 256)],
+    ]
+    if SMOKE:
+        axes = dict(n_gateways=(16, 64), n_lambda=(4, 8))
+    else:
+        axes = dict(n_gateways=(16, 32, 48, 64), n_lambda=(2, 4, 8, 16),
+                    mem_bw_bytes_per_s=(50e9, 100e9, 200e9),
+                    modulation_rate_bps=(8e9, 12e9))
+    front, spec = codesign_pareto(wl, mixes, topologies=("trine", "elec"),
+                                  chunk_size=16 if SMOKE else 4096, **axes)
+    n_joint = spec.n * len(mixes)
+    edp = front.points[:, 0] * front.points[:, 1]
+    cfg = codesign_config_at(spec, mixes, int(front.indices[int(np.argmin(edp))]))
+    vecs = "+".join(str(c.vector_size) for c in cfg["chiplets"])
+    print(f"Co-design search (ResNet18): {n_joint} joint (network x "
+          f"chiplet-mix) points -> {front.size} frontier points")
+    print(f"  best-EDP: {cfg['topology']} interposer, chiplet vecs [{vecs}], "
+          f"G={cfg['n_gateways']:g}, lambda={cfg['n_lambda']:g}")
+
+
 if __name__ == "__main__":
     sweep_subnetworks()
     sweep_wavelengths()
     sweep_trimming_sensitivity()
     sweep_full_design_space()
+    pareto_and_refine()
+    codesign_search()

@@ -17,7 +17,6 @@ Run: PYTHONPATH=src python examples/photonic_mac_ablation.py
 """
 
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +31,9 @@ from repro.runtime.trainer import make_train_step
 
 # REPRO_SMOKE=1: one resolution, a few steps — the CI smoke-mode contract
 # shared with the benchmark layer (tests/test_benchmarks_smoke.py)
-_SMOKE = os.environ.get("REPRO_SMOKE", "0").strip().lower() in (
-    "1", "true", "yes", "on")
+from repro.env import smoke_mode
+
+_SMOKE = smoke_mode()
 STEPS = 4 if _SMOKE else 30
 BITS = (8,) if _SMOKE else (8, 6, 5, 4, 3, 2)
 

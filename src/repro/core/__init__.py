@@ -33,18 +33,32 @@ from repro.core.accelerator import (
     crosslight_25d_siph,
     crosslight_25d_elec,
     evaluate_accelerator,
+    evaluate_accelerator_batch,
+    evaluate_accelerator_grid,
 )
 # NOTE: the `sweep` *function* is deliberately not re-exported here — it
 # would shadow the `repro.core.sweep` submodule attribute on the package.
 # Use `from repro.core.sweep import sweep`.
 from repro.core.sweep import (
+    GridSpec,
     SweepGrid,
     SweepResult,
     build_grid,
+    grid_spec,
     network_columns,
     evaluate_columns,
+    sweep_chunked,
     sweep_scalar_reference,
-    evaluate_accelerator_batch,
+)
+# `search` mirrors the note above: `pareto_search`/`codesign_pareto` are the
+# one-call entry points; the full toolkit lives in `repro.core.search`.
+from repro.core.search import (
+    ParetoFront,
+    codesign_pareto,
+    pareto_front,
+    pareto_mask,
+    pareto_search,
+    refine_continuous,
 )
 
 __all__ = [n for n in dir() if not n.startswith("_")]

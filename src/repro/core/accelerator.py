@@ -21,20 +21,30 @@ for the 2.5D win (the other being the high-bandwidth photonic interposer).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import functools
+from typing import Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
-from repro.core.devices import DeviceLibrary, DEFAULT_DEVICES
-from repro.core.power import Traffic, evaluate_network, NetworkReport
+from repro.core.devices import DeviceLibrary, DEFAULT_DEVICES, device_columns
+from repro.core.power import (
+    EVAL_DEVICE_FIELDS,
+    Traffic,
+    eval_network_math,
+    evaluate_network,
+    NetworkReport,
+)
 from repro.core.topology import (
+    MODEL_FIELDS,
     NetworkModel,
     NetworkParams,
     sprint_bus,
     trine_network,
     electrical_mesh,
 )
-from repro.core.planner import plan_gateway_activation
+from repro.core.planner import plan_gateway_activation, plan_gateway_activation_arr
 from repro.core.workloads import Workload
 
 
@@ -155,6 +165,24 @@ def chiplet_columns(accel: AcceleratorConfig) -> Dict[str, np.ndarray]:
     }
 
 
+def chiplet_mix_columns(mixes: Sequence[Sequence[ChipletSpec]]
+                        ) -> Dict[str, np.ndarray]:
+    """A batch of chiplet mixes as (M, C) columns — the vmapped axis of the
+    co-design grid kernel.  Shorter mixes are padded with zero-unit chiplets
+    (vector_size 1), which the kernel masks out of both the throughput sum
+    and the slot minimum."""
+    if not mixes:
+        raise ValueError("need at least one chiplet mix")
+    width = max(len(m) for m in mixes)
+    n_units = np.zeros((len(mixes), width), np.float64)
+    vec = np.ones((len(mixes), width), np.float64)
+    for i, mix in enumerate(mixes):
+        for j, c in enumerate(mix):
+            n_units[i, j] = c.n_units
+            vec[i, j] = c.vector_size
+    return {"n_units": n_units, "vector_size": vec}
+
+
 # --------------------------------------------------------------------------
 # Evaluation
 # --------------------------------------------------------------------------
@@ -227,3 +255,182 @@ def evaluate_accelerator(
         memory_s=total_mem,
         network_energy_j=net_energy,
     )
+
+
+# --------------------------------------------------------------------------
+# Co-design grid evaluation: vmapped chiplet-mix axis x network-config axis
+# --------------------------------------------------------------------------
+
+
+def _to_device(x) -> jax.Array:
+    # float64 when jax_enable_x64 is on, namespace default otherwise
+    return jnp.asarray(np.asarray(x, np.float64))
+
+
+def _accel_mix_math(cc, frac_ov, lc, nets, dev, mem_bw, mac_rate, slot_e,
+                    xfers, *, adaptive: bool):
+    """One chiplet mix against (N,) network configs and (L,) workload layers
+    — pure jnp; `jax.vmap` lifts the mix axis, `jax.jit` compiles the result.
+
+    cc   : (C,) chiplet columns (zero-unit rows are padding)
+    lc   : (L,) layer columns
+    nets : (N,) NetworkModel field columns
+    dev  : (N,) EVAL_DEVICE_FIELDS columns
+    frac_ov : optional precomputed PCMC activation, (L,) or (N, L); when
+        None and `adaptive`, the planner runs in-kernel per (config, layer)
+    returns (N,)-shaped AccelReport fields.
+    """
+    vec = cc["vector_size"][:, None]                            # (C, 1)
+    units = cc["n_units"][:, None]
+    passes = jnp.ceil(lc["dot_length"][None, :] / vec)          # (C, L)
+    thr = jnp.where(units > 0, units * mac_rate / passes, 0.0)
+    total_thr = thr.sum(0)                                      # (L,)
+    slots = jnp.where(units > 0, passes * vec, jnp.inf).min(0)  # (L,)
+    c_s = lc["n_dots"] / total_thr                              # (L,)
+    compute_e = (lc["n_dots"] * slots).sum() * slot_e           # ()
+
+    bytes_total = lc["weight_bytes"] + lc["in_bytes"] + lc["out_bytes"]
+    bits = 8.0 * bytes_total                                    # (L,)
+    if frac_ov is not None:
+        frac = frac_ov
+    elif adaptive:
+        demand = bytes_total / jnp.maximum(c_s, 1e-12)          # (L,)
+        n_gw = jnp.maximum(1.0, jnp.floor(nets["n_wavelengths"] / 8.0))
+        frac = plan_gateway_activation_arr(
+            demand[None, :], nets["effective_bw_bps"][:, None] / 8.0,
+            n_gw[:, None], xp=jnp)                              # (N, L)
+    else:
+        frac = jnp.ones_like(bits)
+
+    nets2 = {k: v[:, None] for k, v in nets.items()}            # (N, 1)
+    dev2 = {k: v[:, None] for k, v in dev.items()}
+    m = eval_network_math(nets2, dev2, bits[None, :], xfers, frac)  # (N, L)
+
+    mem_s = bytes_total[None, :] / mem_bw[:, None]              # (N, L)
+    # double-buffered: network/memory overlap compute; layer pays the max
+    layer_lat = jnp.maximum(jnp.maximum(c_s[None, :], m["latency_s"]), mem_s)
+    latency = layer_lat.sum(-1)                                 # (N,)
+    net_e = m["energy_j"].sum(-1)
+    net_s = m["latency_s"].sum(-1)
+    energy = compute_e + net_e
+    bits_sum = bits.sum()
+    return {
+        "latency_s": latency,
+        "power_w": energy / jnp.maximum(latency, 1e-30),
+        "energy_j": energy,
+        "epb_j": net_e / jnp.maximum(bits_sum, 1.0),
+        "compute_s": jnp.broadcast_to(c_s.sum(), latency.shape),
+        "network_s": net_s,
+        "memory_s": mem_s.sum(-1),
+        "network_energy_j": net_e,
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _grid_kernel(adaptive: bool, has_frac: bool):
+    """Jitted vmap of `_accel_mix_math` over the chiplet-mix axis."""
+    mix_axes = {"n_units": 0, "vector_size": 0}
+    if has_frac:
+        def single(cc, frac_ov, lc, nets, dev, mem_bw, mac_rate, slot_e,
+                   xfers):
+            return _accel_mix_math(cc, frac_ov, lc, nets, dev, mem_bw,
+                                   mac_rate, slot_e, xfers, adaptive=adaptive)
+        in_axes = (mix_axes, 0, None, None, None, None, None, None, None)
+    else:
+        def single(cc, lc, nets, dev, mem_bw, mac_rate, slot_e, xfers):
+            return _accel_mix_math(cc, None, lc, nets, dev, mem_bw,
+                                   mac_rate, slot_e, xfers, adaptive=adaptive)
+        in_axes = (mix_axes, None, None, None, None, None, None, None)
+    return jax.jit(jax.vmap(single, in_axes=in_axes))
+
+
+def evaluate_accelerator_grid(
+    wl: Workload,
+    mixes: Sequence[Sequence[ChipletSpec]],
+    nets: Mapping[str, np.ndarray],
+    dev_cols: Mapping[str, np.ndarray],
+    mem_bw_bytes_per_s,
+    *,
+    mac_rate_hz: float = 5e9,
+    lambda_slot_energy_j: float = 30e-15,
+    adaptive_gateways: bool = True,
+    transfers_per_layer: int = 16,
+    frac: Optional[np.ndarray] = None,
+) -> Dict[str, np.ndarray]:
+    """Joint (chiplet-mix x network-config) accelerator evaluation in one
+    jitted call: M mixes x N network configs x all L workload layers.
+
+    `nets` holds MODEL_FIELDS columns and `dev_cols` EVAL_DEVICE_FIELDS
+    columns, each (N,) or scalar (a sweep-chunk's `nets`/`cols` dicts fit
+    directly); `mem_bw_bytes_per_s` likewise.  Returns (M, N) float64 arrays
+    for every AccelReport field.  `frac` optionally overrides the in-kernel
+    PCMC planner with a precomputed activation of shape (M, L) or (M, N, L)
+    — `evaluate_accelerator_batch` uses that to keep its float64 host-side
+    planner rounding.  Memory is O(M * N * L); stream big network grids in
+    chunks (see `core.search.codesign_pareto`).
+    """
+    lc = {k: _to_device(v) for k, v in layer_columns(wl).items()}
+    cc = {k: _to_device(v) for k, v in chiplet_mix_columns(mixes).items()}
+    shape = np.broadcast_shapes(
+        *(np.shape(nets[k]) for k in MODEL_FIELDS),
+        *(np.shape(dev_cols[k]) for k in EVAL_DEVICE_FIELDS),
+        np.shape(mem_bw_bytes_per_s))
+    n = int(shape[0]) if shape else 1
+    nets_j = {k: _to_device(np.broadcast_to(
+        np.asarray(nets[k], np.float64), (n,))) for k in MODEL_FIELDS}
+    dev_j = {k: _to_device(np.broadcast_to(
+        np.asarray(dev_cols[k], np.float64), (n,)))
+        for k in EVAL_DEVICE_FIELDS}
+    mem_bw_j = _to_device(np.broadcast_to(
+        np.asarray(mem_bw_bytes_per_s, np.float64), (n,)))
+    mac = _to_device(mac_rate_hz)
+    slot = _to_device(lambda_slot_energy_j)
+    xfers = _to_device(transfers_per_layer)
+    if frac is None:
+        out = _grid_kernel(bool(adaptive_gateways), False)(
+            cc, lc, nets_j, dev_j, mem_bw_j, mac, slot, xfers)
+    else:
+        out = _grid_kernel(bool(adaptive_gateways), True)(
+            cc, _to_device(frac), lc, nets_j, dev_j, mem_bw_j, mac, slot,
+            xfers)
+    return {k: np.asarray(v, np.float64) for k, v in out.items()}
+
+
+def evaluate_accelerator_batch(
+    accel: AcceleratorConfig,
+    wl: Workload,
+    devices: Optional[DeviceLibrary] = None,
+) -> AccelReport:
+    """Batched mirror of `evaluate_accelerator`: the per-layer Python loop
+    becomes one (M=1 mix, N=1 config) cell of the vmapped co-design grid
+    kernel.  The PCMC gateway planner runs host-side in float64 so its step
+    rounding is bit-identical to the scalar reference path."""
+    d = devices or DEFAULT_DEVICES
+    lc = layer_columns(wl)
+    cc = chiplet_columns(accel)
+    bytes_total = lc["weight_bytes"] + lc["in_bytes"] + lc["out_bytes"]
+    net = accel.network
+    if accel.adaptive_gateways:
+        passes = np.ceil(lc["dot_length"][:, None] / cc["vector_size"][None, :])
+        thr = cc["n_units"][None, :] * accel.mac_rate_hz / passes
+        c_s = lc["n_dots"] / thr.sum(axis=1)
+        demand = bytes_total / np.maximum(c_s, 1e-12)
+        frac = plan_gateway_activation_arr(
+            demand, net.effective_bw_bps / 8.0,
+            max(1, net.n_wavelengths // 8))
+    else:
+        frac = np.ones_like(bytes_total)
+    nets = {f: np.float64(getattr(net, f)) for f in MODEL_FIELDS}
+    out = evaluate_accelerator_grid(
+        wl, [accel.chiplets], nets, device_columns(d),
+        accel.mem_bw_bytes_per_s,
+        mac_rate_hz=accel.mac_rate_hz,
+        lambda_slot_energy_j=accel.lambda_slot_energy_j,
+        transfers_per_layer=accel.transfers_per_layer,
+        frac=frac[None, :])
+    return AccelReport(
+        name=accel.name,
+        **{f: float(out[f][0, 0])
+           for f in ("latency_s", "power_w", "energy_j", "epb_j",
+                     "compute_s", "network_s", "memory_s",
+                     "network_energy_j")})

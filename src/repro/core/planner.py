@@ -37,16 +37,23 @@ if TYPE_CHECKING:  # pragma: no cover
     from repro.core.topology import NetworkParams
 
 
+def _asx(xp, v):
+    """float64 on the numpy path, namespace default under jax tracing."""
+    return np.asarray(v, np.float64) if xp is np else xp.asarray(v)
+
+
 def choose_subnetworks_arr(n_lambda, modulation_rate_bps, n_mem_chiplets,
-                           mem_bw_bytes_per_s, n_gateways):
+                           mem_bw_bytes_per_s, n_gateways, xp=np):
     """Vectorized K*: elementwise over struct-of-arrays parameter columns
-    (the sweep-engine path; `choose_subnetworks` is the scalar wrapper)."""
-    wg_bw = np.asarray(n_lambda, np.float64) * np.asarray(modulation_rate_bps, np.float64)
-    mem_bw = np.asarray(n_mem_chiplets, np.float64) * np.asarray(mem_bw_bytes_per_s, np.float64) * 8.0
-    k = np.maximum(1.0, np.ceil(mem_bw / wg_bw))
+    (the sweep-engine path; `choose_subnetworks` is the scalar wrapper).
+    Pass ``xp=jax.numpy`` to trace it inside a jitted/differentiated kernel;
+    the round/ceil quantization is piecewise-constant (zero gradient)."""
+    wg_bw = _asx(xp, n_lambda) * _asx(xp, modulation_rate_bps)
+    mem_bw = _asx(xp, n_mem_chiplets) * _asx(xp, mem_bw_bytes_per_s) * 8.0
+    k = xp.maximum(1.0, xp.ceil(mem_bw / wg_bw))
     # power-of-two so subnet trees stay balanced (paper uses 8)
-    k_pow2 = 2.0 ** np.round(np.log2(k))
-    return np.minimum(k_pow2, np.asarray(n_gateways, np.float64))
+    k_pow2 = 2.0 ** xp.round(xp.log2(k))
+    return xp.minimum(k_pow2, _asx(xp, n_gateways))
 
 
 def choose_subnetworks(p: "NetworkParams") -> int:
@@ -66,14 +73,15 @@ def choose_subnetworks(p: "NetworkParams") -> int:
 
 
 def plan_gateway_activation_arr(demand_bytes_per_s, max_bw_bytes_per_s,
-                                n_gateways):
-    """Vectorized PCMC gateway-activation fraction (sweep/batched path)."""
-    demand = np.asarray(demand_bytes_per_s, np.float64)
-    maxbw = np.asarray(max_bw_bytes_per_s, np.float64)
-    n = np.asarray(n_gateways, np.float64)
-    frac = np.clip(demand / np.where(maxbw > 0, maxbw, np.inf), 0.0, 1.0)
-    steps = np.maximum(1.0, np.ceil(frac * n))
-    return np.where(maxbw > 0, steps / n, 1.0)
+                                n_gateways, xp=np):
+    """Vectorized PCMC gateway-activation fraction (sweep/batched path).
+    ``xp=jax.numpy`` makes it traceable inside the co-design grid kernel."""
+    demand = _asx(xp, demand_bytes_per_s)
+    maxbw = _asx(xp, max_bw_bytes_per_s)
+    n = _asx(xp, n_gateways)
+    frac = xp.clip(demand / xp.where(maxbw > 0, maxbw, np.inf), 0.0, 1.0)
+    steps = xp.maximum(1.0, xp.ceil(frac * n))
+    return xp.where(maxbw > 0, steps / n, 1.0)
 
 
 def plan_gateway_activation(

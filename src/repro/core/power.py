@@ -18,12 +18,26 @@ Electrical: per-bit link+router energy, router static power.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 from repro.core.devices import DeviceLibrary, DEFAULT_DEVICES, laser_electrical_power_w
 from repro.core.topology import NetworkModel
+
+# device leaves the batched metric kernel reads (the topology kernels consume
+# the rest); `eval_network_math` expects exactly these keys in its `dev` dict
+EVAL_DEVICE_FIELDS = (
+    "pd.sensitivity_dbm", "pd.energy_per_bit_j",
+    "laser.power_margin_db", "laser.coupling_loss_db",
+    "laser.wall_plug_efficiency", "laser.bank_overhead_w",
+    "mr.tuning_power_w",
+    "mzi.static_power_w", "mzi.switch_energy_j",
+    "driver.energy_per_bit_j", "driver.serdes_energy_per_bit_j",
+    "elec.energy_per_bit_j", "elec.router_power_w",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +66,62 @@ class NetworkReport:
     energy_per_bit_j: float
     laser_power_w: float
     trimming_power_w: float
+
+
+def eval_network_math(nets: Dict[str, jax.Array], dev: Dict[str, jax.Array],
+                      total_bits: jax.Array, n_transfers: jax.Array,
+                      active_fraction: jax.Array) -> Dict[str, jax.Array]:
+    """Branch-free batched mirror of `evaluate_network` in pure jax.numpy:
+    both the photonic and the electrical formula evaluate on every lane and
+    `is_electrical` selects.  All operands broadcast elementwise, so callers
+    batch over configurations, workload traffics, per-layer traffic, or any
+    combination.  Pure (un-jitted) so it composes: `core.sweep` jits it as
+    the grid kernel (optionally with buffer donation), `core.accelerator`
+    inlines it per (chiplet-mix, network, layer) lane, and
+    `core.search.refine_continuous` differentiates through it (the round()
+    wavelength/bank quantization is piecewise-constant — zero gradient)."""
+    # ---- photonic ----
+    frac = jnp.clip(active_fraction, 1e-3, 1.0)
+    n_lambda_active = jnp.maximum(1.0, jnp.round(nets["n_wavelengths"] * frac))
+    n_banks_active = jnp.maximum(1.0, jnp.round(nets["n_laser_banks"] * frac))
+    p_tx_dbm = (dev["pd.sensitivity_dbm"] + dev["laser.power_margin_db"]
+                + nets["worst_path_loss_db"] + dev["laser.coupling_loss_db"])
+    per_lambda_w = 1e-3 * 10.0 ** (p_tx_dbm / 10.0)
+    laser_p = (n_lambda_active * per_lambda_w / dev["laser.wall_plug_efficiency"]
+               + n_banks_active * dev["laser.bank_overhead_w"])
+    trimming_p = nets["n_mr"] * dev["mr.tuning_power_w"] * frac
+    switch_p = nets["n_mzi"] * dev["mzi.static_power_w"] * frac
+    static_p = laser_p + trimming_p + switch_p
+
+    bw = nets["effective_bw_bps"] * frac
+    lat_ph = total_bits / bw + n_transfers * nets["per_transfer_s"]
+    per_bit = (dev["driver.energy_per_bit_j"]
+               + dev["driver.serdes_energy_per_bit_j"]
+               + dev["pd.energy_per_bit_j"])
+    dyn_e = total_bits * per_bit
+    switch_e = n_transfers * nets["n_stages"] * dev["mzi.switch_energy_j"]
+    energy_ph = static_p * lat_ph + dyn_e + switch_e
+    power_ph = static_p + (dyn_e + switch_e) / jnp.maximum(lat_ph, 1e-30)
+
+    # ---- electrical ----
+    lat_el = (total_bits / nets["effective_bw_bps"]
+              + n_transfers * nets["per_transfer_s"])
+    dyn_el = total_bits * dev["elec.energy_per_bit_j"] * nets["avg_hops"]
+    static_el = nets["n_routers"] * dev["elec.router_power_w"]
+    energy_el = dyn_el + static_el * lat_el
+    power_el = static_el + dyn_el / jnp.maximum(lat_el, 1e-30)
+
+    is_el = nets["is_electrical"] > 0
+    latency = jnp.where(is_el, lat_el, lat_ph)
+    energy = jnp.where(is_el, energy_el, energy_ph)
+    return {
+        "power_w": jnp.where(is_el, power_el, power_ph),
+        "latency_s": latency,
+        "energy_j": energy,
+        "energy_per_bit_j": energy / jnp.maximum(total_bits, 1.0),
+        "laser_power_w": jnp.where(is_el, 0.0, laser_p),
+        "trimming_power_w": jnp.where(is_el, 0.0, trimming_p),
+    }
 
 
 def evaluate_network(

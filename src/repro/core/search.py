@@ -1,0 +1,593 @@
+"""Pareto/co-design search engine on top of the batched sweep engine.
+
+The paper's value proposition is a design-space argument: find the
+interposer-network (and chiplet-mix) configurations on the latency / energy /
+power frontier.  `core.sweep` evaluates grids; this module extracts and
+refines frontiers:
+
+  pareto_mask(points)        jitted O(n log n) Pareto-front membership for
+                             2- or 3-objective point clouds — lexicographic
+                             sort + linear scan with a Fenwick (binary
+                             indexed) prefix-min tree over second-objective
+                             ranks, NOT the O(n^2) pairwise mask.  Exact:
+                             objectives are dense-rank transformed first, so
+                             float32 tracing cannot flip a dominance
+                             comparison (ranks < 2^24 are exact in f32).
+  pareto_mask_reference      the O(n^2) blockwise numpy brute force the
+                             tests/benchmarks cross-check against.
+  ParetoFront / merge_fronts streaming-compatible front objects: Pareto
+                             extraction distributes over unions,
+                             front(A ∪ B) = front(front(A) ∪ front(B)),
+                             so per-chunk fronts merge into the exact
+                             whole-grid front.
+  ParetoReducer              a `core.sweep.ChunkReducer` — plugs the merge
+                             reduction into `sweep_chunked`, holding only the
+                             running front (bounded memory for 1e7-point
+                             grids).
+  pareto_search(...)         one-call streaming per-workload front over a
+                             network grid.
+  codesign_pareto(...)       the joint network × chiplet-mix search: each
+                             grid chunk is evaluated through the vmapped
+                             accelerator kernel (`core.accelerator.
+                             evaluate_accelerator_grid`), flat indices encode
+                             (mix, network-config).
+  refine_continuous(...)     gradient-based local refinement: jax.grad
+                             through the xp-generic topology kernels + the
+                             shared metric math w.r.t. the *continuous*
+                             columns (losses, rates, bandwidths, geometry),
+                             descended with a projected (log-space, boxed)
+                             gradient loop from a Pareto point.
+
+Dominance convention (weak Pareto): point q dominates p iff q <= p in every
+objective and q != p in at least one; exact duplicates do not dominate each
+other, so all copies of a non-dominated point stay on the front.  Lower is
+better in every objective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.power import EVAL_DEVICE_FIELDS, Traffic, eval_network_math
+from repro.core.topology import TOPOLOGY_ARRAYS
+from repro.core.sweep import (
+    DEFAULT_TOPOLOGIES,
+    ChunkReducer,
+    GridSpec,
+    SweepChunk,
+    SweepResult,
+    _as_f64,
+    _network_columns_arrays,
+    grid_spec,
+    sweep_chunked,
+)
+from repro.core.workloads import Workload
+
+__all__ = [
+    "OBJECTIVES", "pareto_mask", "pareto_mask_reference", "ParetoFront",
+    "merge_fronts", "pareto_front", "ParetoReducer", "pareto_search",
+    "codesign_pareto", "codesign_config_at", "refine_continuous",
+    "refine_front_point", "DEFAULT_REFINE_AXES",
+]
+
+# the paper's three reported quantities, all minimized
+OBJECTIVES: Tuple[str, ...] = ("latency_s", "energy_j", "power_w")
+
+
+# --------------------------------------------------------------------------
+# Jitted O(n log n) front extraction (sort + scan)
+# --------------------------------------------------------------------------
+
+
+def _pareto2_scan(f: jax.Array) -> jax.Array:
+    """Dominated mask for lex-sorted deduplicate-representative 2D points:
+    i is dominated iff some strictly-earlier row has f1 <= f1[i] (f0 <= is
+    implied by the sort) — an exclusive prefix cummin + compare."""
+    n = f.shape[0]
+    excl = jnp.concatenate([
+        jnp.full((1,), jnp.inf, f.dtype), lax.cummin(f[:, 1])[:-1]])
+    return excl <= f[:, 1]
+
+
+def _pareto3_scan(f: jax.Array) -> jax.Array:
+    """Dominated mask for lex-sorted 3D points via a Fenwick prefix-min tree.
+
+    After sorting by (f0, f1, f2), row i is dominated iff an earlier row has
+    f1 <= f1[i] AND f2 <= f2[i].  Scanning rows in sorted order while
+    maintaining a Fenwick tree over f1-ranks holding the min f2 inserted so
+    far answers that prefix query in O(log n); total O(n log n) — the
+    Kung–Luccio–Preparata sweep expressed as a lax.scan."""
+    n = f.shape[0]
+    log_n = max(1, int(np.ceil(np.log2(n + 1))) + 1)  # static trip count
+    sorted_f1 = jnp.sort(f[:, 1])
+    # rank(v) = #elements < v: ties share a rank, so "rank <= r[i]" covers
+    # exactly the f1 <= f1[i] population.  1-indexed for the Fenwick tree.
+    r = (jnp.searchsorted(sorted_f1, f[:, 1], side="left")
+         .astype(jnp.int32) + 1)
+    tree0 = jnp.full((n + 1,), jnp.inf, f.dtype)
+
+    def step(tree, rz):
+        ri, zi = rz
+
+        def qbody(_, mp):  # prefix-min query over ranks [1, ri]
+            m, p = mp
+            m = jnp.minimum(m, jnp.where(p > 0, tree[p], jnp.inf))
+            return m, p - (p & -p)
+
+        m, _ = lax.fori_loop(
+            0, log_n, qbody, (jnp.asarray(jnp.inf, f.dtype), ri))
+        dominated = m <= zi
+
+        def ubody(_, tp):  # point update: tree[p] = min(tree[p], zi) upward
+            t, p = tp
+            ok = p <= n
+            idx = jnp.where(ok, p, 0)
+            t = t.at[idx].min(jnp.where(ok, zi, jnp.inf))
+            return t, jnp.where(ok, p + (p & -p), p)
+
+        tree, _ = lax.fori_loop(0, log_n, ubody, (tree, ri))
+        return tree, dominated
+
+    _, dominated = lax.scan(step, tree0, (r, f[:, 2]))
+    return dominated
+
+
+def _pareto_mask_core(pts: jax.Array) -> jax.Array:
+    """(n, m) points -> (n,) front-membership mask.  m in {2, 3} (static)."""
+    n, m = pts.shape
+    order = jnp.lexsort(tuple(pts[:, j] for j in range(m - 1, -1, -1)))
+    f = pts[order]
+    # exact duplicates never dominate each other: every row of a duplicate
+    # run takes the verdict of its first row (the representative), whose
+    # prefix query sees only strictly-earlier distinct rows
+    eq_prev = jnp.concatenate([
+        jnp.zeros((1,), bool), jnp.all(f[1:] == f[:-1], axis=1)])
+    rep = lax.cummax(jnp.where(eq_prev, -1, jnp.arange(n)))
+    dominated = (_pareto2_scan(f) if m == 2 else _pareto3_scan(f))[rep]
+    return jnp.zeros((n,), bool).at[order].set(~dominated)
+
+
+_pareto_mask_jit = jax.jit(_pareto_mask_core)
+
+_MAX_POINTS = 1 << 24  # dense ranks stay exact in float32 below this
+
+
+def _padded_size(n: int) -> int:
+    return max(16, 1 << (n - 1).bit_length())
+
+
+def pareto_mask(points) -> np.ndarray:
+    """Front membership (lower-is-better weak dominance) of an (n, m) point
+    cloud, m in {2, 3}, via the jitted sort+scan extractor.
+
+    Inputs are dense-rank transformed per objective before tracing, so the
+    result is exact float64 dominance regardless of the jax default dtype;
+    +inf rows (used internally for padding) always land off the front when
+    any finite point exists.  Inputs are padded to the next power of two so
+    the jit cache stays O(log n) entries across chunk/merge call sites.
+    """
+    pts = np.asarray(points, np.float64)
+    if pts.ndim != 2 or pts.shape[1] not in (2, 3):
+        raise ValueError(f"expected (n, 2|3) points, got shape {pts.shape}")
+    n = pts.shape[0]
+    if n == 0:
+        return np.zeros(0, bool)
+    if n >= _MAX_POINTS:
+        raise ValueError(
+            f"pareto_mask handles < {_MAX_POINTS} points per call; stream "
+            "larger grids through ParetoReducer / pareto_search")
+    npad = _padded_size(n)
+    if npad != n:
+        pts = np.concatenate(
+            [pts, np.full((npad - n, pts.shape[1]), np.inf)], axis=0)
+    ranks = np.empty(pts.shape, np.float32)
+    for j in range(pts.shape[1]):
+        _, inv = np.unique(pts[:, j], return_inverse=True)
+        ranks[:, j] = inv
+    return np.asarray(_pareto_mask_jit(jnp.asarray(ranks)))[:n]
+
+
+def pareto_mask_reference(points, block: int = 2048) -> np.ndarray:
+    """O(n^2) blockwise pairwise-dominance brute force (numpy float64): the
+    golden reference `pareto_mask` is tested and benchmarked against."""
+    pts = np.asarray(points, np.float64)
+    n = pts.shape[0]
+    dominated = np.zeros(n, bool)
+    for s in range(0, n, block):
+        p = pts[s:s + block]
+        dom = np.zeros(p.shape[0], bool)
+        for s2 in range(0, n, block):
+            q = pts[s2:s2 + block]
+            le = (q[:, None, :] <= p[None, :, :]).all(-1)
+            ne = (q[:, None, :] != p[None, :, :]).any(-1)
+            dom |= (le & ne).any(0)
+        dominated[s:s + block] = dom
+    return ~dominated
+
+
+# --------------------------------------------------------------------------
+# Front objects + the merge-fronts reduction
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoFront:
+    """A set of mutually non-dominated points with their flat design indices
+    (grid rows; for co-design searches, mix_id * grid_n + grid row)."""
+
+    objectives: Tuple[str, ...]
+    points: np.ndarray   # (k, m) float64 objective values
+    indices: np.ndarray  # (k,) int64
+
+    @property
+    def size(self) -> int:
+        return int(self.indices.size)
+
+    def canonical(self) -> "ParetoFront":
+        """Deterministic ordering (lex by objectives, then index) so fronts
+        from different evaluation orders compare with array_equal."""
+        keys = (self.indices,) + tuple(
+            self.points[:, j] for j in range(self.points.shape[1] - 1, -1, -1))
+        order = np.lexsort(keys)
+        return ParetoFront(self.objectives, self.points[order],
+                           self.indices[order])
+
+    def configs(self, spec: GridSpec) -> List[Dict[str, float]]:
+        return [spec.config_at(int(i)) for i in self.indices]
+
+
+def _front_exact(points: np.ndarray, indices: np.ndarray,
+                 objectives: Tuple[str, ...]) -> ParetoFront:
+    mask = pareto_mask(points)
+    return ParetoFront(objectives, points[mask],
+                       np.asarray(indices)[mask].astype(np.int64)).canonical()
+
+
+def _dominated_by(pts: np.ndarray, front_pts: np.ndarray) -> np.ndarray:
+    """Which of `pts` are weakly dominated by some member of `front_pts`
+    (numpy, blockwise) — the cheap prefilter before exact merge."""
+    n = pts.shape[0]
+    if front_pts.size == 0 or n == 0:
+        return np.zeros(n, bool)
+    out = np.zeros(n, bool)
+    block = max(256, 8_000_000 // max(1, front_pts.shape[0]))
+    for s in range(0, n, block):
+        p = pts[s:s + block]
+        le = (front_pts[None, :, :] <= p[:, None, :]).all(-1)
+        ne = (front_pts[None, :, :] != p[:, None, :]).any(-1)
+        out[s:s + block] = (le & ne).any(1)
+    return out
+
+
+_FRONT_BLOCK = 4096
+
+
+def _front_of(points: np.ndarray, indices: np.ndarray,
+              objectives: Tuple[str, ...],
+              block: int = _FRONT_BLOCK) -> ParetoFront:
+    """Exact front of an arbitrary point cloud.  Large clouds are folded
+    block-by-block: each block is prefiltered against the running front
+    (cheap vectorized numpy dominance, O(block * front_size)), and only the
+    survivors go through the exact jitted sort+scan — so the sequential scan
+    never sees more than front_size + block points at once.  A dominated
+    point is always dominated by some *front* member (dominance is
+    transitive), so prefiltering against the running front of everything
+    seen so far is lossless."""
+    indices = np.asarray(indices).astype(np.int64)
+    n = points.shape[0]
+    if n <= block:
+        return _front_exact(points, indices, objectives)
+    front: Optional[ParetoFront] = None
+    for s in range(0, n, block):
+        pts_b, idx_b = points[s:s + block], indices[s:s + block]
+        if front is not None and front.size:
+            keep = ~_dominated_by(pts_b, front.points)
+            pts_b = np.concatenate([front.points, pts_b[keep]], axis=0)
+            idx_b = np.concatenate([front.indices, idx_b[keep]], axis=0)
+        front = _front_exact(pts_b, idx_b, objectives)
+    return front
+
+
+def merge_fronts(*fronts: ParetoFront) -> ParetoFront:
+    """front(A ∪ B ∪ ...) from per-part fronts: Pareto extraction distributes
+    over unions, which is what makes chunked streaming search exact."""
+    if not fronts:
+        raise ValueError("no fronts to merge")
+    objectives = fronts[0].objectives
+    if any(f.objectives != objectives for f in fronts):
+        raise ValueError("fronts disagree on objectives")
+    pts = np.concatenate([f.points for f in fronts], axis=0)
+    idx = np.concatenate([f.indices for f in fronts], axis=0)
+    return _front_of(pts, idx, objectives)
+
+
+def _merge_into(front: Optional[ParetoFront], pts: np.ndarray,
+                idx: np.ndarray,
+                objectives: Tuple[str, ...]) -> ParetoFront:
+    """Merge a raw point block into a running front: prefilter points the
+    front already dominates, then extract over front + survivors."""
+    idx = np.asarray(idx).astype(np.int64)
+    if front is not None and front.size:
+        keep = ~_dominated_by(pts, front.points)
+        pts = np.concatenate([front.points, pts[keep]], axis=0)
+        idx = np.concatenate([front.indices, idx[keep]], axis=0)
+    return _front_of(pts, idx, objectives)
+
+
+def pareto_front(result: SweepResult,
+                 objectives: Sequence[str] = OBJECTIVES):
+    """Monolithic front(s) of an in-memory SweepResult: one ParetoFront, or
+    a list of them when the sweep batched multiple workload traffics."""
+    objectives = tuple(objectives)
+    pts = np.stack([np.asarray(result.metrics[k], np.float64)
+                    for k in objectives], axis=-1)
+    idx = np.arange(pts.shape[-2])
+    if pts.ndim == 2:
+        return _front_of(pts, idx, objectives)
+    return [_front_of(pts[w], idx, objectives) for w in range(pts.shape[0])]
+
+
+class ParetoReducer(ChunkReducer):
+    """`sweep_chunked` reducer holding only the running per-workload
+    front(s): the bounded-memory streaming Pareto search."""
+
+    def __init__(self, objectives: Sequence[str] = OBJECTIVES):
+        self.objectives = tuple(objectives)
+
+    def step(self, carry, chunk: SweepChunk):
+        pts_all = np.stack([np.asarray(chunk.metrics[k], np.float64)
+                            for k in self.objectives], axis=-1)
+        scalar = pts_all.ndim == 2
+        blocks = [pts_all] if scalar else list(pts_all)
+        if carry is None:
+            carry = {"scalar": scalar, "fronts": [None] * len(blocks)}
+        idx = chunk.indices
+        carry["fronts"] = [
+            _merge_into(front, pts, idx, self.objectives)
+            for front, pts in zip(carry["fronts"], blocks)]
+        return carry
+
+    def finish(self, carry, spec: GridSpec):
+        if carry is None:
+            raise ValueError("empty sweep")
+        return carry["fronts"][0] if carry["scalar"] else carry["fronts"]
+
+
+def pareto_search(
+    traffic,
+    topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
+    devices=None,
+    active_fraction: float = 1.0,
+    chunk_size: int = 65536,
+    objectives: Sequence[str] = OBJECTIVES,
+    shard: bool = False,
+    **axes: Sequence[float],
+):
+    """Streaming per-workload Pareto front over a network configuration grid:
+    `sweep_chunked` + `ParetoReducer` in one call.  Returns a ParetoFront
+    (or a list per workload traffic); recover configurations with
+    `front.configs(grid_spec(topologies, **axes))`."""
+    return sweep_chunked(
+        traffic, ParetoReducer(objectives), topologies=topologies,
+        devices=devices, active_fraction=active_fraction,
+        chunk_size=chunk_size, shard=shard, **axes)
+
+
+# --------------------------------------------------------------------------
+# Co-design search: network grid x chiplet-mix axis
+# --------------------------------------------------------------------------
+
+
+ACCEL_OBJECTIVES: Tuple[str, ...] = ("latency_s", "energy_j", "power_w")
+
+
+def codesign_pareto(
+    wl: Workload,
+    mixes: Sequence[Sequence],
+    topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
+    devices=None,
+    chunk_size: int = 8192,
+    objectives: Sequence[str] = ACCEL_OBJECTIVES,
+    mac_rate_hz: float = 5e9,
+    lambda_slot_energy_j: float = 30e-15,
+    adaptive_gateways: bool = True,
+    transfers_per_layer: int = 16,
+    **axes: Sequence[float],
+) -> Tuple[ParetoFront, GridSpec]:
+    """Joint (network-grid x chiplet-mix) Pareto search for one workload.
+
+    Streams the network grid in chunks; each chunk is evaluated against all
+    `mixes` at once through the vmapped accelerator kernel
+    (`core.accelerator.evaluate_accelerator_grid`), and the running front is
+    merged per chunk.  Flat front indices encode the joint design point as
+    ``mix_id * spec.n + grid_row`` — decode with `codesign_config_at`.
+    Memory is O(len(mixes) * chunk_size * n_layers), independent of grid
+    size.
+    """
+    from repro.core.accelerator import evaluate_accelerator_grid
+
+    objectives = tuple(objectives)
+    spec = grid_spec(topologies, devices=devices, **axes)
+    n = spec.n
+    n_mix = len(mixes)
+    front: Optional[ParetoFront] = None
+    mix_off = np.arange(n_mix, dtype=np.int64)[:, None] * n
+    step = int(min(max(1, chunk_size), n)) if n else 0
+    for start in range(0, n, step):
+        stop = min(start + step, n)
+        cols, topo_id = spec.chunk_cols(start, stop)
+        pad = step - (stop - start)
+        if pad:  # repeat the last row so the kernel compiles once (as in
+            # sweep_chunked); padded lanes are sliced off below
+            cols = {k: np.concatenate([v, np.repeat(v[-1:], pad)])
+                    for k, v in cols.items()}
+            topo_id = np.concatenate([topo_id, np.repeat(topo_id[-1:], pad)])
+        nets = _network_columns_arrays(cols, topo_id, spec.topologies)
+        mem_bw = cols["n_mem_chiplets"] * cols["mem_bw_bytes_per_s"]
+        out = evaluate_accelerator_grid(
+            wl, mixes, nets, cols, mem_bw,
+            mac_rate_hz=mac_rate_hz,
+            lambda_slot_energy_j=lambda_slot_energy_j,
+            adaptive_gateways=adaptive_gateways,
+            transfers_per_layer=transfers_per_layer)
+        valid = stop - start
+        pts = np.stack(
+            [np.asarray(out[k], np.float64)[:, :valid] for k in objectives],
+            axis=-1).reshape(n_mix * valid, len(objectives))
+        idx = (mix_off + np.arange(start, stop)[None, :]).reshape(-1)
+        front = _merge_into(front, pts, idx, objectives)
+    if front is None:
+        raise ValueError("empty grid")
+    return front, spec
+
+
+def codesign_config_at(spec: GridSpec, mixes: Sequence, flat_index: int
+                       ) -> Dict[str, object]:
+    """Decode a `codesign_pareto` flat index into mix + network settings."""
+    flat_index = int(flat_index)
+    mix_id, row = divmod(flat_index, spec.n)
+    out: Dict[str, object] = {"mix": mix_id, "chiplets": list(mixes[mix_id])}
+    out.update(spec.config_at(row))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Gradient refinement of Pareto points (projected descent, log-space)
+# --------------------------------------------------------------------------
+
+
+DEFAULT_REFINE_AXES: Tuple[str, ...] = (
+    "modulation_rate_bps", "mem_bw_bytes_per_s", "interposer_side_cm",
+    "mzi.insertion_loss_db")
+
+
+def refine_continuous(
+    topology: str,
+    overrides: Mapping[str, float],
+    traffic: Traffic,
+    refine_axes: Sequence[str] = DEFAULT_REFINE_AXES,
+    objective: str = "edp",
+    steps: int = 48,
+    lr: float = 0.1,
+    span: float = 4.0,
+    bounds: Optional[Mapping[str, Tuple[float, float]]] = None,
+    active_fraction: float = 1.0,
+    devices=None,
+) -> Dict[str, object]:
+    """Locally refine one configuration by jax.grad through the continuous
+    columns (losses, rates, bandwidths, interposer geometry).
+
+    The design point is parameterized in log-space (every continuous column
+    is positive and spans decades) and descended with a projected-gradient
+    loop: theta <- clip(theta - lr * grad, log lo, log hi), default box
+    [x0/span, x0*span] per axis.  `objective` is "edp"
+    (log energy + log latency, the example's search quantity) or any metric
+    name ("energy_j", "latency_s", "power_w", ...) minimized in log-space.
+    Discrete kernel quantities (stage counts, subnetwork counts, rounded
+    active-wavelength counts) are piecewise-constant — zero gradient — so
+    descent moves only along genuinely continuous directions; a step that
+    crosses a quantization boundary is still scored exactly by the next
+    forward evaluation.
+
+    Returns {"start", "refined"} column values, the objective trace, and the
+    refined point's full metric dict.
+    """
+    if topology not in TOPOLOGY_ARRAYS:
+        raise KeyError(f"unknown topology {topology!r}")
+    spec = grid_spec((topology,), devices=devices)
+    cols: Dict[str, float] = dict(spec.base)
+    for k, v in overrides.items():
+        if k == "topology":
+            continue
+        if k not in cols:
+            raise KeyError(f"unknown column {k!r}")
+        cols[k] = float(v)
+    names = tuple(refine_axes)
+    for nm in names:
+        if nm not in cols:
+            raise KeyError(f"unknown refine axis {nm!r}")
+        if cols[nm] <= 0:
+            raise ValueError(f"refine axis {nm!r} must be positive")
+
+    x0 = np.asarray([cols[nm] for nm in names], np.float64)
+    if bounds is None:
+        bounds = {nm: (x0[i] / span, x0[i] * span)
+                  for i, nm in enumerate(names)}
+    lo = jnp.log(_as_f64([bounds[nm][0] for nm in names]))
+    hi = jnp.log(_as_f64([bounds[nm][1] for nm in names]))
+
+    kern = TOPOLOGY_ARRAYS[topology]
+    bits, xfers = traffic.total_bits, traffic.n_transfers
+
+    def metrics_of(theta):
+        c = {k: _as_f64(v) for k, v in cols.items()}
+        x = jnp.exp(theta)
+        for i, nm in enumerate(names):
+            c[nm] = x[i]
+        fields = kern(c, xp=jnp)
+        dev = {k: c[k] for k in EVAL_DEVICE_FIELDS}
+        return eval_network_math(fields, dev, _as_f64(bits), _as_f64(xfers),
+                                 _as_f64(active_fraction))
+
+    def loss_of(theta):
+        m = metrics_of(theta)
+        if objective == "edp":
+            return jnp.log(m["energy_j"]) + jnp.log(m["latency_s"])
+        return jnp.log(m[objective])
+
+    value_and_grad = jax.jit(jax.value_and_grad(loss_of))
+    metrics_jit = jax.jit(metrics_of)
+
+    theta = jnp.clip(jnp.log(_as_f64(x0)), lo, hi)
+    best_loss, best_theta = np.inf, theta
+    trace: List[float] = []
+    for _ in range(steps):
+        v, g = value_and_grad(theta)
+        v = float(v)
+        trace.append(v)
+        if v < best_loss:
+            best_loss, best_theta = v, theta
+        theta = jnp.clip(theta - lr * g, lo, hi)
+    v_end = float(value_and_grad(theta)[0])
+    trace.append(v_end)
+    if v_end < best_loss:
+        best_loss, best_theta = v_end, theta
+
+    # projection happens in (possibly float32) log-space; snap the reported
+    # values back inside the exact float64 box
+    x_best = np.clip(np.exp(np.asarray(best_theta, np.float64)),
+                     [bounds[nm][0] for nm in names],
+                     [bounds[nm][1] for nm in names])
+    metrics = {k: float(v)
+               for k, v in metrics_jit(best_theta).items()}
+    return {
+        "topology": topology,
+        "objective": objective,
+        "refine_axes": list(names),
+        "start": {nm: float(x0[i]) for i, nm in enumerate(names)},
+        "refined": {nm: float(x_best[i]) for i, nm in enumerate(names)},
+        "start_value": float(np.exp(trace[0])),
+        "refined_value": float(np.exp(best_loss)),
+        "improvement": float(1.0 - np.exp(best_loss - trace[0])),
+        "loss_trace": trace,
+        "metrics": metrics,
+    }
+
+
+def refine_front_point(
+    spec: GridSpec,
+    traffic: Traffic,
+    index: int,
+    **kwargs,
+) -> Dict[str, object]:
+    """`refine_continuous` seeded from flat grid row `index` of `spec` —
+    the "descend locally from a Pareto point" entry point."""
+    cfg = spec.config_at(int(index))
+    topology = cfg.pop("topology")
+    return refine_continuous(topology, cfg, traffic, **kwargs)

@@ -28,6 +28,37 @@ dataclass path one row at a time; it is the golden reference the parity tests
 `evaluate_accelerator_batch` is the same treatment for the Fig. 6 accelerator
 model: all layers of a workload evaluated as one batch instead of a Python
 loop per layer.
+
+Chunked streaming evaluation
+----------------------------
+
+`sweep(...)` materializes every grid column in host memory — ~45 float64
+columns, so a 1e7-point grid costs ~3.6 GB before a single metric exists.
+The streaming path bounds that:
+
+  grid_spec(...)           the same validation/axis vocabulary as
+                           `build_grid`, but *lazy*: a GridSpec holds only
+                           the axis value tuples and can materialize any
+                           [start, stop) row window in O(window) memory
+                           (mixed-radix decode of the flat index).
+  sweep_chunked(traffic, reducer, ...)
+                           iterates fixed-size column chunks through the
+                           same jitted kernel (one compile for all chunks;
+                           the last chunk is padded), feeding each chunk's
+                           metrics to a running `ChunkReducer` and keeping
+                           nothing else.  Peak memory is O(chunk_size),
+                           independent of grid size.
+
+On non-CPU backends the chunk kernel donates its input buffers
+(`donate_argnums`), so steady-state chunk evaluation reuses device memory;
+with more than one device and ``shard=True`` chunks are laid out across
+devices along the config axis via `jax.sharding.NamedSharding` (a no-op on
+a single device).
+
+Reducers are associative folds over chunks: `MinReducer` tracks a metric's
+running argmin + config, `core.search.ParetoReducer` keeps the running
+(latency, energy, power) Pareto front via the merge-fronts property
+front(A ∪ B) = front(front(A) ∪ front(B)).
 """
 
 from __future__ import annotations
@@ -53,20 +84,23 @@ from repro.core.topology import (
     NetworkParams,
     model_from_row,
 )
-from repro.core.planner import plan_gateway_activation_arr
-from repro.core.power import Traffic, evaluate_network
-from repro.core.workloads import Workload
-from repro.core.accelerator import (
-    AccelReport,
-    AcceleratorConfig,
-    chiplet_columns,
-    layer_columns,
+from repro.core.power import (
+    EVAL_DEVICE_FIELDS,
+    Traffic,
+    eval_network_math as eval_math,
+    evaluate_network,
+)
+from repro.core.accelerator import (  # noqa: F401  (re-exported; see below)
+    evaluate_accelerator_batch,
+    evaluate_accelerator_grid,
 )
 
 __all__ = [
     "SweepGrid", "SweepResult", "build_grid", "network_columns",
     "evaluate_columns", "sweep", "sweep_scalar_reference",
     "evaluate_accelerator_batch", "METRIC_FIELDS", "DEFAULT_TOPOLOGIES",
+    "GridSpec", "grid_spec", "SweepChunk", "ChunkReducer", "MinReducer",
+    "sweep_chunked", "eval_math",
 ]
 
 DEFAULT_TOPOLOGIES: Tuple[str, ...] = ("sprint", "spacx", "tree", "trine", "elec")
@@ -79,21 +113,83 @@ _INT_PARAM_FIELDS = frozenset({"n_gateways", "n_mem_chiplets", "n_lambda",
 METRIC_FIELDS = ("power_w", "latency_s", "energy_j", "energy_per_bit_j",
                  "laser_power_w", "trimming_power_w")
 
-# device leaves the power kernel reads (the topology kernels read the rest)
-_EVAL_DEVICE_FIELDS = (
-    "pd.sensitivity_dbm", "pd.energy_per_bit_j",
-    "laser.power_margin_db", "laser.coupling_loss_db",
-    "laser.wall_plug_efficiency", "laser.bank_overhead_w",
-    "mr.tuning_power_w",
-    "mzi.static_power_w", "mzi.switch_energy_j",
-    "driver.energy_per_bit_j", "driver.serdes_energy_per_bit_j",
-    "elec.energy_per_bit_j", "elec.router_power_w",
-)
+# device leaves the power kernel reads (re-exported; defined in core.power
+# next to the shared metric math)
+_EVAL_DEVICE_FIELDS = EVAL_DEVICE_FIELDS
 
 
 # --------------------------------------------------------------------------
 # Grid construction
 # --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Lazy cartesian grid: the axis vocabulary and defaults of `build_grid`
+    without the materialized columns.  Any [start, stop) row window can be
+    produced on demand by mixed-radix decoding the flat index, so a window
+    costs O(window) memory regardless of grid size — the foundation of
+    `sweep_chunked`'s bounded-memory streaming evaluation.
+
+    axis order: ("topology", *axes), C-order raveled — identical flat-index
+    layout to the eager SweepGrid `build_grid` returns.
+    """
+
+    topologies: Tuple[str, ...]
+    axes: Dict[str, Tuple[float, ...]]
+    base: Dict[str, float]
+    shape: Tuple[int, ...]
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.shape))
+
+    def chunk_cols(self, start: int, stop: int
+                   ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """(cols, topo_id) for flat rows [start, stop) — element-for-element
+        the values eager `build_grid` places at those rows."""
+        idx = np.arange(start, stop)
+        digits = np.unravel_index(idx, self.shape)
+        cols = {name: np.full(idx.size, v, np.float64)
+                for name, v in self.base.items()}
+        for ai, (name, vals) in enumerate(self.axes.items()):
+            cols[name] = np.asarray(vals, np.float64)[digits[1 + ai]]
+        return cols, np.ascontiguousarray(digits[0])
+
+    def config_at(self, i: int) -> Dict[str, float]:
+        """Human-readable swept-axis settings of flat row `i`."""
+        digits = np.unravel_index(int(i), self.shape)
+        out: Dict[str, float] = {"topology": self.topologies[int(digits[0])]}
+        for ai, (name, vals) in enumerate(self.axes.items()):
+            out[name] = float(vals[int(digits[1 + ai])])
+        return out
+
+
+def grid_spec(
+    topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
+    devices: Optional[DeviceLibrary] = None,
+    **axes: Sequence[float],
+) -> GridSpec:
+    """Validate and describe a grid without materializing it (see
+    `build_grid` for the axis vocabulary)."""
+    base: Dict[str, float] = {name: float(getattr(NetworkParams(), name))
+                              for name in PARAM_FIELDS}
+    base.update(device_columns(devices or DEFAULT_DEVICES))
+    base["n_subnetworks"] = 0.0
+
+    for name in axes:
+        if name not in base:
+            raise KeyError(
+                f"unknown sweep axis {name!r}; valid axes are NetworkParams "
+                f"fields, dotted device leaves, or 'n_subnetworks'")
+    unknown = [t for t in topologies if t not in TOPOLOGY_ARRAYS]
+    if unknown:
+        raise KeyError(f"unknown topologies {unknown!r}")
+
+    axes_vals = {k: tuple(float(x) for x in v) for k, v in axes.items()}
+    shape = (len(topologies),) + tuple(len(v) for v in axes_vals.values())
+    return GridSpec(topologies=tuple(topologies), axes=axes_vals,
+                    base=base, shape=shape)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,107 +241,49 @@ def build_grid(
     matched auto).  Unswept columns take their NetworkParams/DeviceLibrary
     defaults.
     """
-    base: Dict[str, float] = {name: float(getattr(NetworkParams(), name))
-                              for name in PARAM_FIELDS}
-    base.update(device_columns(devices or DEFAULT_DEVICES))
-    base["n_subnetworks"] = 0.0
-
-    for name in axes:
-        if name not in base:
-            raise KeyError(
-                f"unknown sweep axis {name!r}; valid axes are NetworkParams "
-                f"fields, dotted device leaves, or 'n_subnetworks'")
-    unknown = [t for t in topologies if t not in TOPOLOGY_ARRAYS]
-    if unknown:
-        raise KeyError(f"unknown topologies {unknown!r}")
-
-    axes_vals = {k: tuple(float(x) for x in v) for k, v in axes.items()}
-    shape = (len(topologies),) + tuple(len(v) for v in axes_vals.values())
-    n = int(np.prod(shape))
-
-    topo_id = np.broadcast_to(
-        np.arange(len(topologies)).reshape((-1,) + (1,) * len(axes_vals)),
-        shape).ravel()
-
-    cols: Dict[str, np.ndarray] = {}
-    for name, v in base.items():
-        cols[name] = np.full(n, v, np.float64)
-    for ai, (name, vals) in enumerate(axes_vals.items()):
-        view = (1,) * (1 + ai) + (len(vals),) + (1,) * (len(axes_vals) - ai - 1)
-        cols[name] = np.broadcast_to(
-            np.asarray(vals, np.float64).reshape(view), shape).ravel().copy()
-
-    return SweepGrid(topologies=tuple(topologies), axes=axes_vals,
-                     cols=cols, topo_id=topo_id, shape=shape)
+    spec = grid_spec(topologies, devices=devices, **axes)
+    cols, topo_id = spec.chunk_cols(0, spec.n)
+    return SweepGrid(topologies=spec.topologies, axes=spec.axes,
+                     cols=cols, topo_id=topo_id, shape=spec.shape)
 
 
-def network_columns(grid: SweepGrid) -> Dict[str, np.ndarray]:
-    """Struct-of-arrays NetworkModel fields for every grid row."""
-    out = {f: np.zeros(grid.n, np.float64) for f in MODEL_FIELDS}
-    for ti, name in enumerate(grid.topologies):
-        mask = grid.topo_id == ti
-        sub = {k: v[mask] for k, v in grid.cols.items()}
+def _network_columns_arrays(cols: Mapping[str, np.ndarray],
+                            topo_id: np.ndarray,
+                            topologies: Sequence[str]) -> Dict[str, np.ndarray]:
+    """Struct-of-arrays NetworkModel fields for (cols, topo_id) rows."""
+    out = {f: np.zeros(topo_id.size, np.float64) for f in MODEL_FIELDS}
+    for ti, name in enumerate(topologies):
+        mask = topo_id == ti
+        if not mask.any():
+            continue  # chunk windows may not contain every topology
+        sub = {k: v[mask] for k, v in cols.items()}
         fields = TOPOLOGY_ARRAYS[name](sub)
         for f in MODEL_FIELDS:
             out[f][mask] = fields[f]
     return out
 
 
+def network_columns(grid: SweepGrid) -> Dict[str, np.ndarray]:
+    """Struct-of-arrays NetworkModel fields for every grid row."""
+    return _network_columns_arrays(grid.cols, grid.topo_id, grid.topologies)
+
+
 # --------------------------------------------------------------------------
 # Batched evaluation (the jitted kernel)
 # --------------------------------------------------------------------------
 
+# the metric math itself lives in core.power.eval_network_math (shared with
+# the co-design accelerator kernel and the gradient-refinement path); this
+# module owns the jit/donation/sharding machinery around it
+_eval_kernel = jax.jit(eval_math)
+# donating nets/dev lets XLA reuse the chunk input buffers for the outputs in
+# steady-state streaming; CPU ignores donation (and warns), so gate on backend
+_eval_kernel_donated = jax.jit(eval_math, donate_argnums=(0, 1))
 
-@jax.jit
-def _eval_kernel(nets: Dict[str, jax.Array], dev: Dict[str, jax.Array],
-                 total_bits: jax.Array, n_transfers: jax.Array,
-                 active_fraction: jax.Array) -> Dict[str, jax.Array]:
-    """Branch-free batched mirror of `power.evaluate_network`: both the
-    photonic and the electrical formula evaluate on every lane, `is_electrical`
-    selects.  All inputs broadcast elementwise, so callers may batch over
-    configurations, workload traffics, or both at once."""
-    # ---- photonic ----
-    frac = jnp.clip(active_fraction, 1e-3, 1.0)
-    n_lambda_active = jnp.maximum(1.0, jnp.round(nets["n_wavelengths"] * frac))
-    n_banks_active = jnp.maximum(1.0, jnp.round(nets["n_laser_banks"] * frac))
-    p_tx_dbm = (dev["pd.sensitivity_dbm"] + dev["laser.power_margin_db"]
-                + nets["worst_path_loss_db"] + dev["laser.coupling_loss_db"])
-    per_lambda_w = 1e-3 * 10.0 ** (p_tx_dbm / 10.0)
-    laser_p = (n_lambda_active * per_lambda_w / dev["laser.wall_plug_efficiency"]
-               + n_banks_active * dev["laser.bank_overhead_w"])
-    trimming_p = nets["n_mr"] * dev["mr.tuning_power_w"] * frac
-    switch_p = nets["n_mzi"] * dev["mzi.static_power_w"] * frac
-    static_p = laser_p + trimming_p + switch_p
 
-    bw = nets["effective_bw_bps"] * frac
-    lat_ph = total_bits / bw + n_transfers * nets["per_transfer_s"]
-    per_bit = (dev["driver.energy_per_bit_j"]
-               + dev["driver.serdes_energy_per_bit_j"]
-               + dev["pd.energy_per_bit_j"])
-    dyn_e = total_bits * per_bit
-    switch_e = n_transfers * nets["n_stages"] * dev["mzi.switch_energy_j"]
-    energy_ph = static_p * lat_ph + dyn_e + switch_e
-    power_ph = static_p + (dyn_e + switch_e) / jnp.maximum(lat_ph, 1e-30)
-
-    # ---- electrical ----
-    lat_el = (total_bits / nets["effective_bw_bps"]
-              + n_transfers * nets["per_transfer_s"])
-    dyn_el = total_bits * dev["elec.energy_per_bit_j"] * nets["avg_hops"]
-    static_el = nets["n_routers"] * dev["elec.router_power_w"]
-    energy_el = dyn_el + static_el * lat_el
-    power_el = static_el + dyn_el / jnp.maximum(lat_el, 1e-30)
-
-    is_el = nets["is_electrical"] > 0
-    latency = jnp.where(is_el, lat_el, lat_ph)
-    energy = jnp.where(is_el, energy_el, energy_ph)
-    return {
-        "power_w": jnp.where(is_el, power_el, power_ph),
-        "latency_s": latency,
-        "energy_j": energy,
-        "energy_per_bit_j": energy / jnp.maximum(total_bits, 1.0),
-        "laser_power_w": jnp.where(is_el, 0.0, laser_p),
-        "trimming_power_w": jnp.where(is_el, 0.0, trimming_p),
-    }
+def _chunk_eval_kernel():
+    return (_eval_kernel if jax.default_backend() == "cpu"
+            else _eval_kernel_donated)
 
 
 def _as_f64(x):
@@ -329,6 +367,161 @@ def sweep(
     return SweepResult(grid=grid, nets=nets, metrics=metrics)
 
 
+# --------------------------------------------------------------------------
+# Chunked streaming evaluation (bounded memory for 1e7-point grids)
+# --------------------------------------------------------------------------
+
+
+def _traffic_arrays(traffic) -> Tuple[np.ndarray, np.ndarray]:
+    """(total_bits, n_transfers) operands: scalar for one Traffic, (W, 1)
+    columns for a sequence of workload traffics (broadcast against configs)."""
+    if isinstance(traffic, Traffic):
+        return np.float64(traffic.total_bits), np.float64(traffic.n_transfers)
+    ts = list(traffic)
+    bits = np.asarray([[t.total_bits] for t in ts], np.float64)
+    xfers = np.asarray([[t.n_transfers] for t in ts], np.float64)
+    return bits, xfers
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepChunk:
+    """One evaluated grid window [start, stop): metrics (and model fields)
+    for those rows only.  `metrics` values have shape (..., stop-start) —
+    a leading workload axis appears when the sweep batches traffics."""
+
+    spec: GridSpec
+    start: int
+    stop: int
+    topo_id: np.ndarray
+    nets: Dict[str, np.ndarray]
+    metrics: Dict[str, np.ndarray]
+
+    @property
+    def indices(self) -> np.ndarray:
+        """Flat grid row indices of this chunk."""
+        return np.arange(self.start, self.stop)
+
+
+class ChunkReducer:
+    """Associative fold over SweepChunks.  Implementations hold only running
+    reductions (argmin scalars, Pareto fronts, histograms ...) so streaming
+    sweeps stay O(chunk_size) regardless of grid size."""
+
+    def init(self, spec: GridSpec):
+        return None
+
+    def step(self, carry, chunk: SweepChunk):
+        raise NotImplementedError
+
+    def finish(self, carry, spec: GridSpec):
+        return carry
+
+
+class MinReducer(ChunkReducer):
+    """Running argmin of one metric — the bounded-memory `SweepResult.best`.
+    Tracks per-workload minima when the sweep batches traffics."""
+
+    def __init__(self, metric: str = "energy_j"):
+        self.metric = metric
+
+    def step(self, carry, chunk: SweepChunk):
+        m = chunk.metrics[self.metric]
+        j = np.argmin(m, axis=-1)
+        v = np.take_along_axis(m, j[..., None], -1)[..., 0]
+        i = chunk.start + j
+        if carry is None:
+            return v, i
+        best_v, best_i = carry
+        upd = v < best_v
+        return np.where(upd, v, best_v), np.where(upd, i, best_i)
+
+    def finish(self, carry, spec: GridSpec):
+        if carry is None:
+            raise ValueError("empty sweep")
+        v, i = carry
+        if np.ndim(i) == 0:
+            return {"value": float(v), "index": int(i),
+                    "config": spec.config_at(int(i))}
+        flat_i = np.asarray(i).ravel()
+        return {"value": np.asarray(v), "index": np.asarray(i),
+                "config": [spec.config_at(int(k)) for k in flat_i]}
+
+
+def _config_sharding():
+    """NamedSharding over the config axis when >1 device is visible (the
+    jax.sharding scale-out hook for grids past one device's memory); None on
+    a single device."""
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return None
+    mesh = jax.sharding.Mesh(np.array(devs), ("configs",))
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("configs"))
+
+
+def sweep_chunked(
+    traffic,
+    reducer: ChunkReducer,
+    topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
+    devices: Optional[DeviceLibrary] = None,
+    active_fraction: float = 1.0,
+    chunk_size: int = 65536,
+    shard: bool = False,
+    **axes: Sequence[float],
+):
+    """Stream a configuration grid through the jitted kernel in fixed-size
+    chunks, folding each chunk into `reducer` and keeping nothing else.
+
+    Every chunk has exactly `chunk_size` columns (the last one is padded by
+    repeating its final row, then sliced back) so the kernel compiles once;
+    peak host memory is O(chunk_size * n_columns), independent of grid size.
+    `traffic` may be one Traffic or a sequence (per-workload metric rows).
+    With ``shard=True`` and multiple visible devices, chunk columns are laid
+    out across devices along the config axis.
+    """
+    spec = grid_spec(topologies, devices=devices, **axes)
+    n = spec.n
+    if n == 0:
+        raise ValueError("empty grid")
+    bits, xfers = _traffic_arrays(traffic)
+    bits_j, xfers_j = _as_f64(bits), _as_f64(xfers)
+    frac_j = _as_f64(active_fraction)
+
+    sharding = _config_sharding() if shard else None
+    chunk_size = int(min(max(1, chunk_size), n))
+    if sharding is not None:
+        ndev = len(jax.devices())
+        chunk_size = ((chunk_size + ndev - 1) // ndev) * ndev
+    kernel = _chunk_eval_kernel()
+
+    carry = reducer.init(spec)
+    for start in range(0, n, chunk_size):
+        stop = min(start + chunk_size, n)
+        cols, topo_id = spec.chunk_cols(start, stop)
+        pad = chunk_size - (stop - start)
+        if pad:  # repeat the last (valid) row; padded lanes are sliced off
+            cols = {k: np.concatenate([v, np.repeat(v[-1:], pad)])
+                    for k, v in cols.items()}
+            topo_id = np.concatenate([topo_id, np.repeat(topo_id[-1:], pad)])
+        nets = _network_columns_arrays(cols, topo_id, spec.topologies)
+        nets_j = {k: _as_f64(nets[k]) for k in MODEL_FIELDS}
+        dev_j = {k: _as_f64(cols[k]) for k in _EVAL_DEVICE_FIELDS}
+        if sharding is not None:
+            nets_j = {k: jax.device_put(v, sharding)
+                      for k, v in nets_j.items()}
+            dev_j = {k: jax.device_put(v, sharding) for k, v in dev_j.items()}
+        out = kernel(nets_j, dev_j, bits_j, xfers_j, frac_j)
+        out = {k: np.asarray(v, np.float64) for k, v in out.items()}
+        shape = np.broadcast_shapes(*(v.shape for v in out.values()))
+        valid = stop - start
+        out = {k: np.broadcast_to(v, shape)[..., :valid] for k, v in out.items()}
+        nets = {k: v[:valid] for k, v in nets.items()}
+        carry = reducer.step(carry, SweepChunk(
+            spec=spec, start=start, stop=stop, topo_id=topo_id[:valid],
+            nets=nets, metrics=out))
+    return reducer.finish(carry, spec)
+
+
 def sweep_scalar_reference(
     traffic: Traffic,
     topologies: Sequence[str] = DEFAULT_TOPOLOGIES,
@@ -359,63 +552,9 @@ def sweep_scalar_reference(
 
 
 # --------------------------------------------------------------------------
-# Batched accelerator evaluation (paper Fig. 6 path, one batch per workload)
+# Batched accelerator evaluation (paper Fig. 6 path)
 # --------------------------------------------------------------------------
 
-
-def evaluate_accelerator_batch(
-    accel: AcceleratorConfig,
-    wl: Workload,
-    devices: Optional[DeviceLibrary] = None,
-) -> AccelReport:
-    """Batched mirror of `accelerator.evaluate_accelerator`: the per-layer
-    Python loop becomes struct-of-arrays math over all layers at once, with
-    the network evaluated through the shared jitted kernel."""
-    d = devices or DEFAULT_DEVICES
-    lc = layer_columns(wl)
-    cc = chiplet_columns(accel)
-
-    # compute: layer split across chiplets by throughput for its dot length
-    passes = np.ceil(lc["dot_length"][:, None] / cc["vector_size"][None, :])
-    thr = cc["n_units"][None, :] * accel.mac_rate_hz / passes
-    total_thr = thr.sum(axis=1)
-    slots_best = (passes * cc["vector_size"][None, :]).min(axis=1)
-    c_s = lc["n_dots"] / total_thr
-    compute_energy = float(
-        (lc["n_dots"] * slots_best).sum() * accel.lambda_slot_energy_j)
-
-    bytes_total = lc["weight_bytes"] + lc["in_bytes"] + lc["out_bytes"]
-    total_bits = 8.0 * bytes_total
-    n_transfers = np.full_like(bytes_total, accel.transfers_per_layer)
-
-    net = accel.network
-    if accel.adaptive_gateways:
-        demand = bytes_total / np.maximum(c_s, 1e-12)
-        frac = plan_gateway_activation_arr(
-            demand, net.effective_bw_bps / 8.0,
-            max(1, net.n_wavelengths // 8))
-    else:
-        frac = np.ones_like(bytes_total)
-
-    nets = {f: np.float64(getattr(net, f)) for f in MODEL_FIELDS}
-    rep = evaluate_columns(nets, device_columns(d), total_bits, n_transfers,
-                           frac)
-
-    mem_s = bytes_total / accel.mem_bw_bytes_per_s
-    # double-buffered: network/memory overlap compute; layer pays the max
-    layer_lat = np.maximum(np.maximum(c_s, rep["latency_s"]), mem_s)
-    total_lat = float(layer_lat.sum())
-    net_energy = float(rep["energy_j"].sum())
-    bits_sum = float(total_bits.sum())
-    energy = compute_energy + net_energy
-    return AccelReport(
-        name=accel.name,
-        latency_s=total_lat,
-        power_w=energy / max(total_lat, 1e-30),
-        energy_j=energy,
-        epb_j=net_energy / max(bits_sum, 1.0),
-        compute_s=float(c_s.sum()),
-        network_s=float(rep["latency_s"].sum()),
-        memory_s=float(mem_s.sum()),
-        network_energy_j=net_energy,
-    )
+# `evaluate_accelerator_batch` historically lived here; it is now one (mix,
+# config) cell of the vmapped co-design grid kernel in core.accelerator and
+# re-exported (via the import at the top) for existing callers.

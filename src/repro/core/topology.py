@@ -25,6 +25,14 @@ NetworkModel fields, elementwise in float64 numpy.  The scalar dataclass
 constructors (`sprint_bus(p, d)` etc.) are thin batch-of-one wrappers kept for
 existing callers; `core.sweep` drives the same kernels over 10k+ configs at
 once.
+
+Every columnar kernel takes an `xp` namespace argument (numpy by default,
+`jax.numpy` for traced use): with `xp=jnp` the whole topology -> metrics chain
+is differentiable in the continuous columns (losses, rates, bandwidths,
+interposer geometry), which is what `core.search.refine_continuous` uses for
+gradient-based local refinement of Pareto points.  Discrete quantities
+(ceil/floor/round stage and subnetwork counts) are piecewise-constant and
+contribute zero gradient, as intended.
 """
 
 from __future__ import annotations
@@ -87,6 +95,12 @@ class NetworkModel:
 ColumnMap = Mapping[str, np.ndarray]
 
 
+def _asx(xp, v):
+    """Coerce to the kernel namespace: float64 for numpy (the analytical layer
+    is 64-bit host math), namespace-default dtype for jax tracing."""
+    return np.asarray(v, np.float64) if xp is np else xp.asarray(v)
+
+
 def params_columns(p: NetworkParams, d: Optional[DeviceLibrary] = None,
                    n_subnetworks: int = 0) -> Dict[str, np.ndarray]:
     """Batch-of-one column dict for a scalar (params, devices) pair.
@@ -101,13 +115,12 @@ def params_columns(p: NetworkParams, d: Optional[DeviceLibrary] = None,
     return cols
 
 
-def _fields(**kw) -> Dict[str, np.ndarray]:
+def _fields(xp=np, **kw) -> Dict[str, np.ndarray]:
     """Assemble a MODEL_FIELDS dict, zero-filling the ones not given and
     broadcasting everything to a common shape."""
-    out = {name: np.asarray(kw.get(name, 0.0), np.float64)
-           for name in MODEL_FIELDS}
+    out = {name: _asx(xp, kw.get(name, 0.0)) for name in MODEL_FIELDS}
     shape = np.broadcast_shapes(*(v.shape for v in out.values()))
-    return {k: np.broadcast_to(v, shape) for k, v in out.items()}
+    return {k: xp.broadcast_to(v, shape) for k, v in out.items()}
 
 
 def _waveguide_bw_arr(c: ColumnMap):
@@ -117,15 +130,15 @@ def _waveguide_bw_arr(c: ColumnMap):
     return c["n_lambda"] * c["modulation_rate_bps"]
 
 
-def _bus_contention_derate_arr(writers_per_waveguide):
+def _bus_contention_derate_arr(writers_per_waveguide, xp=np):
     """Shared-medium (MWMR) arbitration derating.  Token-slot arbitration
     wastes slots as the writer population grows; switched (circuit) networks
     do not pay this.  Calibrated so a 32-writer bus runs near ~40% utilization
     (SPRINT-class reported network utilizations)."""
-    return 1.0 / (1.0 + 0.05 * np.maximum(0.0, writers_per_waveguide - 1.0))
+    return 1.0 / (1.0 + 0.05 * xp.maximum(0.0, writers_per_waveguide - 1.0))
 
 
-def sprint_bus_arrays(c: ColumnMap) -> Dict[str, np.ndarray]:
+def sprint_bus_arrays(c: ColumnMap, xp=np) -> Dict[str, np.ndarray]:
     """SPRINT [14]: MWMR bus -- every gateway's modulators+filters sit on every
     waveguide, so a signal's worst-case path passes (G-1) gateways' 2*n_lambda
     rings.  8 parallel waveguides to make aggregate BW comparable."""
@@ -136,53 +149,59 @@ def sprint_bus_arrays(c: ColumnMap) -> Dict[str, np.ndarray]:
     loss = through + prop + c["mr.drop_loss_db"] + c["mr.modulation_loss_db"]
     raw = n_wg * _waveguide_bw_arr(c)
     return _fields(
+        xp,
         worst_path_loss_db=loss,
         n_wavelengths=n_wg * c["n_lambda"],
         n_mr=(g + c["n_mem_chiplets"]) * 2 * c["n_lambda"] * 2,  # R+W sets on 2 waveguides each
         aggregate_bw_bps=raw,
-        effective_bw_bps=raw * _bus_contention_derate_arr(g),
-        per_transfer_s=np.full_like(loss, 12e-9),  # MWMR token arbitration
-        n_laser_banks=np.full_like(loss, n_wg),
+        effective_bw_bps=raw * _bus_contention_derate_arr(g, xp),
+        per_transfer_s=xp.full_like(loss, 12e-9),  # MWMR token arbitration
+        n_laser_banks=xp.full_like(loss, n_wg),
     )
 
 
-def spacx_bus_arrays(c: ColumnMap) -> Dict[str, np.ndarray]:
+def spacx_bus_arrays(c: ColumnMap, xp=np) -> Dict[str, np.ndarray]:
     """SPACX [15]: wavelength/cluster-partitioned bus -- gateways are grouped
     into clusters of 8, each cluster on its own shorter waveguide segment, so
     fewer rings sit on any path (lower loss than SPRINT) at the cost of fewer
     concurrently-usable wavelengths (BW partitioned by cluster)."""
     cluster = 8.0
-    if np.any(np.asarray(c["n_gateways"]) < cluster):
+    if xp is np and np.any(np.asarray(c["n_gateways"]) < cluster):
+        # data-dependent validation only on the concrete (numpy) path; under
+        # jax tracing the caller is responsible for a valid grid
         raise ValueError("SPACX requires n_gateways >= 8 (one full cluster); "
                          "smaller values would leave zero usable waveguides")
-    n_clusters = np.floor(c["n_gateways"] / cluster)
+    n_clusters = xp.floor(c["n_gateways"] / cluster)
     through = (cluster - 1) * 2 * c["n_lambda"] * c["mr.through_loss_db"]
     prop = 1.5 * c["interposer_side_cm"] * c["wg.propagation_loss_db_per_cm"]
     loss = through + prop + c["mr.drop_loss_db"] + c["mr.modulation_loss_db"]
     raw = n_clusters * _waveguide_bw_arr(c)
     return _fields(
+        xp,
         worst_path_loss_db=loss,
         n_wavelengths=n_clusters * c["n_lambda"],
         n_mr=(c["n_gateways"] * 2 * c["n_lambda"]
               + c["n_mem_chiplets"] * 2 * c["n_lambda"] * n_clusters),
         aggregate_bw_bps=raw,
-        effective_bw_bps=raw * _bus_contention_derate_arr(np.full_like(loss, cluster)),
-        per_transfer_s=np.full_like(loss, 8e-9),
+        effective_bw_bps=raw * _bus_contention_derate_arr(
+            xp.full_like(loss, cluster), xp),
+        per_transfer_s=xp.full_like(loss, 8e-9),
         n_laser_banks=n_clusters,
     )
 
 
-def tree_network_arrays(c: ColumnMap) -> Dict[str, np.ndarray]:
+def tree_network_arrays(c: ColumnMap, xp=np) -> Dict[str, np.ndarray]:
     """Single switched tree (paper Fig. 3b): all G gateways under one binary
     tree of broadband MZIs.  Stage count ceil(log2 G) (=5 for 32 gateways, as
     the paper states); memory BW restricted to ONE waveguide's bandwidth."""
     g = c["n_gateways"]
-    stages = np.ceil(np.log2(g))
+    stages = xp.ceil(xp.log2(g))
     prop = (c["interposer_side_cm"] / 2) * c["wg.propagation_loss_db_per_cm"]
     loss = (stages * c["mzi.insertion_loss_db"] + prop
             + c["mr.drop_loss_db"] + c["mr.modulation_loss_db"])
     raw = _waveguide_bw_arr(c)  # ONE waveguide -- the paper's stated limitation
     return _fields(
+        xp,
         worst_path_loss_db=loss,
         n_wavelengths=c["n_lambda"],
         n_mr=(g + c["n_mem_chiplets"]) * 2 * c["n_lambda"],
@@ -191,11 +210,11 @@ def tree_network_arrays(c: ColumnMap) -> Dict[str, np.ndarray]:
         aggregate_bw_bps=raw,
         effective_bw_bps=raw,
         per_transfer_s=stages * c["mzi.switch_time_s"],
-        n_laser_banks=np.ones_like(loss),
+        n_laser_banks=xp.ones_like(loss),
     )
 
 
-def trine_network_arrays(c: ColumnMap) -> Dict[str, np.ndarray]:
+def trine_network_arrays(c: ColumnMap, xp=np) -> Dict[str, np.ndarray]:
     """TRINE [11] (paper Fig. 3c): K parallel tree subnetworks, each spanning
     G/K gateways => ceil(log2(G/K)) stages.  K chosen to match the memory
     bandwidth (planner.choose_subnetworks; =8 in the paper's setup), unless
@@ -205,18 +224,19 @@ def trine_network_arrays(c: ColumnMap) -> Dict[str, np.ndarray]:
     g = c["n_gateways"]
     k_auto = choose_subnetworks_arr(
         c["n_lambda"], c["modulation_rate_bps"], c["n_mem_chiplets"],
-        c["mem_bw_bytes_per_s"], g)
-    k_over = np.asarray(c.get("n_subnetworks", 0.0), np.float64)
-    k = np.where(k_over > 0, k_over, k_auto)
-    per = np.maximum(1.0, np.floor(g / k))
-    stages = np.maximum(1.0, np.ceil(np.log2(per)))
+        c["mem_bw_bytes_per_s"], g, xp=xp)
+    k_over = _asx(xp, c.get("n_subnetworks", 0.0))
+    k = xp.where(k_over > 0, k_over, k_auto)
+    per = xp.maximum(1.0, xp.floor(g / k))
+    stages = xp.maximum(1.0, xp.ceil(xp.log2(per)))
     prop = (c["interposer_side_cm"] / 3) * c["wg.propagation_loss_db_per_cm"]  # shorter subnet spans
     loss = (stages * c["mzi.insertion_loss_db"] + prop
             + c["mr.drop_loss_db"] + c["mr.modulation_loss_db"])
     raw = k * _waveguide_bw_arr(c)
     # memory can only source/sink at its aggregate BW (bandwidth matching)
-    raw = np.minimum(raw, c["n_mem_chiplets"] * c["mem_bw_bytes_per_s"] * 8)
+    raw = xp.minimum(raw, c["n_mem_chiplets"] * c["mem_bw_bytes_per_s"] * 8)
     return _fields(
+        xp,
         worst_path_loss_db=loss,
         # memory side needs one modulator/filter bank per subnetwork (SWMR) +
         # each gateway keeps one set (this is why TRINE's trimming power is
@@ -232,11 +252,11 @@ def trine_network_arrays(c: ColumnMap) -> Dict[str, np.ndarray]:
     )
 
 
-def electrical_mesh_arrays(c: ColumnMap) -> Dict[str, np.ndarray]:
+def electrical_mesh_arrays(c: ColumnMap, xp=np) -> Dict[str, np.ndarray]:
     """Electrical 2D-mesh interposer NoC baseline (DeFT [21]), used by the
     2.5D-CrossLight-Elec-Interposer variant in Sec. V."""
     n = c["n_gateways"] + c["n_mem_chiplets"]
-    side = np.ceil(np.sqrt(n))
+    side = xp.ceil(xp.sqrt(n))
     avg_hops = 2 * side / 3  # uniform-random average Manhattan distance
     hop_cm = c["interposer_side_cm"] / side
     per_hop_s = (c["elec.router_latency_s"]
@@ -245,14 +265,15 @@ def electrical_mesh_arrays(c: ColumnMap) -> Dict[str, np.ndarray]:
     # memory chiplets sit at the mesh edge with 2 usable ports each; hotspot
     # (gather/scatter to memory) saturates the mesh well below bisection
     mem_ingress = c["n_mem_chiplets"] * 2 * c["elec.link_bandwidth_bps"]
-    raw = np.minimum(bisection, mem_ingress)
+    raw = xp.minimum(bisection, mem_ingress)
     return _fields(
+        xp,
         aggregate_bw_bps=raw,
         effective_bw_bps=raw * c["elec.hotspot_saturation"],
         n_stages=2 * side,
         per_transfer_s=avg_hops * per_hop_s,
-        n_laser_banks=np.ones_like(side),  # dataclass default; unused for elec
-        is_electrical=np.ones_like(side),
+        n_laser_banks=xp.ones_like(side),  # dataclass default; unused for elec
+        is_electrical=xp.ones_like(side),
         avg_hops=avg_hops,
         n_routers=side * side,
     )

@@ -1,0 +1,20 @@
+"""Environment flags shared by benchmarks, examples, and tests."""
+
+from __future__ import annotations
+
+import os
+
+_TRUTHY = ("1", "true", "yes", "on")
+
+
+def smoke_mode(default: bool = False) -> bool:
+    """True when REPRO_SMOKE requests tiny-grid / few-step CI smoke runs.
+
+    The single source of truth for the flag's accepted values — benchmarks
+    and examples must not re-parse the variable themselves, so the contract
+    cannot silently diverge between entry points.
+    """
+    raw = os.environ.get("REPRO_SMOKE")
+    if raw is None:
+        return default
+    return raw.strip().lower() in _TRUTHY

@@ -5,13 +5,12 @@ in the benchmark/example layer break tier-1 instead of rotting silently.
 
 Benchmarks run in-process (they are analytical and fast).  Examples run as
 subprocesses with REPRO_SMOKE=1 and the smallest argument sets their CLIs
-accept — except serve_batched, whose reduced-model serve still compiles for
-minutes on this CPU container; its driver (repro.launch.serve / serve.engine)
-is exercised by tests/test_serving.py, so here it only gets a compile check.
+accept — including serve_batched, whose smoke path (reduced model, batch 2,
+16-token prompts, 4 new tokens) now executes the real prefill + decode loop
+in ~15s on this CPU container.
 """
 
 import os
-import py_compile
 import subprocess
 import sys
 from pathlib import Path
@@ -47,6 +46,54 @@ def test_sweep_bench_smoke():
     assert out["checks"]["batched_matches_scalar"], out
     assert out["checks"]["speedup_over_bar"], out
     assert out["n_configs"] >= 128
+    # smoke reporting is honest: the grid-size check reflects the grid that
+    # actually ran (a 192-point smoke grid is NOT >= 4096) and smoke mode
+    # only exempts it via required_checks, with the smoke flag recorded
+    assert out["smoke"] is True
+    assert out["checks"]["grid_at_least_4096"] == (out["n_configs"] >= 4096)
+    assert "grid_at_least_4096" not in out["required_checks"]
+    assert out["pass"], out
+
+
+def test_pareto_bench_smoke():
+    """Pareto/co-design bench: fronts exact, perf-regression gates hold
+    (chunked within the smoke ratio bar of monolithic, batched over scalar
+    over the smoke bar)."""
+    import benchmarks.pareto_bench as b
+    out = b.run(csv=False, smoke=True)
+    assert out["checks"]["net_front_streaming_equals_monolithic"]
+    assert out["checks"]["net_front_matches_bruteforce"]
+    assert out["checks"]["codesign_front_streaming_equals_monolithic"]
+    assert out["checks"]["codesign_front_matches_bruteforce"]
+    assert out["checks"]["chunked_within_ratio_bar_network"], out["network"]
+    assert out["checks"]["chunked_within_ratio_bar_codesign"], out["codesign"]
+    assert out["checks"]["batched_over_scalar_bar"], out["network"]
+    assert out["checks"]["refinement_improves"]
+    assert out["pass"], out
+    # smoke honesty: joint grid size reported as-run, 1e6 check exempted
+    # (not rewritten) in smoke mode
+    assert out["smoke"] is True
+    assert out["codesign"]["n_joint_points"] < 1_000_000
+    assert not out["checks"]["codesign_grid_at_least_1e6"]
+    assert "codesign_grid_at_least_1e6" not in out["required_checks"]
+
+
+def test_run_summary_consolidation():
+    """benchmarks.run consolidates per-bench checks + perf gates into one
+    summary (the artifacts/summary.json payload)."""
+    import benchmarks.run as runner
+    import benchmarks.sweep_bench as sb
+    import benchmarks.pareto_bench as pb
+    results = {"sweep": sb.run(csv=False, smoke=True),
+               "pareto": pb.run(csv=False, smoke=True)}
+    summary = runner.build_summary(results)
+    assert summary["pass"], summary["checks"]
+    assert summary["perf"]["batched_over_scalar"]["pass"]
+    assert summary["perf"]["chunked_over_monolithic_network"]["pass"]
+    assert summary["perf"]["chunked_over_monolithic_codesign"]["pass"]
+    # smoke-exempt checks must not leak into the consolidated gate
+    assert "pareto/codesign_grid_at_least_1e6" not in summary["checks"]
+    assert "sweep/grid_at_least_4096" not in summary["checks"]
 
 
 def test_roofline_benchmark_smoke():
@@ -121,7 +168,12 @@ def test_example_photonic_mac_ablation():
     assert "photonic 8-bit" in out
 
 
-def test_example_serve_batched_compiles():
-    # full run compiles a reduced LM serve path for minutes on CPU; the
-    # driver itself is covered by tests/test_serving.py
-    py_compile.compile(str(EXAMPLES / "serve_batched.py"), doraise=True)
+def test_example_serve_batched():
+    """Real smoke run of the serve path (prefill + greedy decode with KV
+    cache): REPRO_SMOKE shrinks the example to batch 2 / 16-token prompts /
+    4 new tokens on the reduced model, which finishes in ~15s here — so
+    tier-1 executes the serving loop instead of compile-checking it (the
+    old ROADMAP caveat)."""
+    out = _run_example("serve_batched.py")
+    assert "prefill:" in out and "decode" in out
+    assert "generated shape: (2, 4)" in out

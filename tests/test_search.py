@@ -1,0 +1,365 @@
+"""Tests for the Pareto/co-design search engine (core.search) and the
+chunked streaming evaluator (core.sweep.sweep_chunked):
+
+  * jitted O(n log n) front extraction == O(n^2) brute force, on random
+    clouds with ties/duplicates and on real sweep metrics for every topology
+  * chunked streaming evaluation == monolithic evaluation, element for
+    element, including the padded last chunk and multi-workload batching
+  * merge-fronts associativity (front(A ∪ B) == front(front A ∪ front B))
+  * co-design (network x chiplet-mix) front == brute force over the joint
+    grid
+  * jax.grad through the xp-generic topology kernels == float64 central
+    finite differences of the scalar dataclass path
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    CNN_WORKLOADS,
+    ChipletSpec,
+    NetworkParams,
+    Traffic,
+    evaluate_network,
+)
+from repro.core.devices import DEFAULT_DEVICES, replace_device_leaves
+from repro.core.topology import TOPOLOGIES, TOPOLOGY_ARRAYS
+from repro.core.power import EVAL_DEVICE_FIELDS, eval_network_math
+from repro.core.sweep import (
+    DEFAULT_TOPOLOGIES,
+    ChunkReducer,
+    MinReducer,
+    build_grid,
+    grid_spec,
+    sweep,
+    sweep_chunked,
+)
+from repro.core.search import (
+    OBJECTIVES,
+    ParetoFront,
+    codesign_pareto,
+    merge_fronts,
+    pareto_front,
+    pareto_mask,
+    pareto_mask_reference,
+    pareto_search,
+    refine_continuous,
+    refine_front_point,
+)
+
+TRAFFIC = Traffic(bytes_read=2e8, bytes_written=7e7, n_transfers=320)
+
+GRID_AXES = dict(
+    n_gateways=(8, 16, 32, 64),
+    n_lambda=(4, 8, 16),
+    mem_bw_bytes_per_s=(50e9, 100e9, 200e9),
+)
+
+
+# ---------------------------------------------------------------------------
+# pareto_mask vs brute force
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [2, 3])
+@pytest.mark.parametrize("n", [1, 2, 3, 17, 400, 5000])
+def test_pareto_mask_matches_bruteforce_random(m, n):
+    rng = np.random.default_rng(n * 10 + m)
+    pts = rng.normal(size=(n, m))
+    assert np.array_equal(pareto_mask(pts), pareto_mask_reference(pts))
+
+
+@pytest.mark.parametrize("m", [2, 3])
+def test_pareto_mask_matches_bruteforce_ties_and_duplicates(m):
+    rng = np.random.default_rng(7)
+    # coarse integer grid => many per-objective ties and exact duplicates
+    pts = rng.integers(0, 5, size=(600, m)).astype(float)
+    mask, ref = pareto_mask(pts), pareto_mask_reference(pts)
+    assert np.array_equal(mask, ref)
+    # exact duplicates never dominate each other: all copies share a verdict
+    dup = np.concatenate([pts, pts[:25]], axis=0)
+    mask2 = pareto_mask(dup)
+    assert np.array_equal(mask2[:600][:25] if False else mask2[600:],
+                          mask2[:25])
+    assert np.array_equal(mask2, pareto_mask_reference(dup))
+
+
+def test_pareto_mask_all_identical_points_all_on_front():
+    pts = np.ones((37, 3))
+    assert pareto_mask(pts).all()
+
+
+def test_pareto_mask_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        pareto_mask(np.zeros((4, 5)))
+    assert pareto_mask(np.zeros((0, 3))).shape == (0,)
+
+
+@pytest.mark.parametrize("topology", list(DEFAULT_TOPOLOGIES))
+def test_front_on_real_sweep_metrics_per_topology(topology):
+    """Front of real (latency, energy, power) sweep metrics == brute force,
+    for every topology family including the electrical mesh."""
+    res = sweep(TRAFFIC, topologies=(topology,), **GRID_AXES)
+    front = pareto_front(res)
+    pts = np.stack([res.metrics[k] for k in OBJECTIVES], -1)
+    ref_idx = set(np.where(pareto_mask_reference(pts))[0].tolist())
+    assert set(front.indices.tolist()) == ref_idx
+    assert front.objectives == OBJECTIVES
+
+
+def test_merge_fronts_associativity():
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(900, 3))
+    idx = np.arange(900)
+    whole = merge_fronts(ParetoFront(OBJECTIVES, pts, idx))
+    parts = [ParetoFront(OBJECTIVES, pts[s:s + 300], idx[s:s + 300])
+             for s in (0, 300, 600)]
+    part_fronts = [merge_fronts(p) for p in parts]
+    merged = merge_fronts(*part_fronts)
+    assert np.array_equal(whole.points, merged.points)
+    assert np.array_equal(whole.indices, merged.indices)
+
+
+# ---------------------------------------------------------------------------
+# chunked streaming == monolithic
+# ---------------------------------------------------------------------------
+
+
+class _CollectReducer(ChunkReducer):
+    """Test-only: concatenates every chunk's metrics (NOT bounded memory)."""
+
+    def step(self, carry, chunk):
+        carry = carry or []
+        carry.append(chunk.metrics)
+        return carry
+
+    def finish(self, carry, spec):
+        return {k: np.concatenate([c[k] for c in carry], axis=-1)
+                for k in carry[0]}
+
+
+@pytest.mark.parametrize("chunk_size", [1, 7, 64, 10_000])
+def test_chunked_matches_monolithic(chunk_size):
+    """Streaming chunks (including the repeat-padded last one) reproduce the
+    monolithic metrics element for element."""
+    res = sweep(TRAFFIC, **GRID_AXES)
+    got = sweep_chunked(TRAFFIC, _CollectReducer(), chunk_size=chunk_size,
+                        **GRID_AXES)
+    for k, v in res.metrics.items():
+        np.testing.assert_allclose(got[k], v, rtol=1e-15, err_msg=k)
+
+
+def test_chunked_multi_workload_and_min_reducer():
+    traffics = [CNN_WORKLOADS[n]().traffic() for n in ("LeNet5", "ResNet18")]
+    got = sweep_chunked(traffics, _CollectReducer(), chunk_size=13,
+                        **GRID_AXES)
+    best = sweep_chunked(traffics, MinReducer("energy_j"), chunk_size=13,
+                         **GRID_AXES)
+    assert got["latency_s"].shape[0] == 2
+    for w, t in enumerate(traffics):
+        ref = sweep(t, **GRID_AXES)
+        np.testing.assert_allclose(got["energy_j"][w], ref.metrics["energy_j"],
+                                   rtol=1e-15)
+        i, _ = ref.best("energy_j")
+        assert int(best["index"][w]) == i
+
+
+def test_streaming_pareto_matches_monolithic_and_bruteforce():
+    res = sweep(TRAFFIC, **GRID_AXES)
+    mono = pareto_front(res)
+    stream = pareto_search(TRAFFIC, chunk_size=61, **GRID_AXES)
+    assert np.array_equal(mono.points, stream.points)
+    assert np.array_equal(mono.indices, stream.indices)
+    pts = np.stack([res.metrics[k] for k in OBJECTIVES], -1)
+    assert set(stream.indices.tolist()) == set(
+        np.where(pareto_mask_reference(pts))[0].tolist())
+    cfg = stream.configs(grid_spec(**GRID_AXES))[0]
+    assert cfg["topology"] in DEFAULT_TOPOLOGIES
+
+
+def test_pareto_search_multi_workload_returns_per_workload_fronts():
+    traffics = [CNN_WORKLOADS[n]().traffic() for n in ("LeNet5", "VGG16")]
+    fronts = pareto_search(traffics, chunk_size=40, **GRID_AXES)
+    assert isinstance(fronts, list) and len(fronts) == 2
+    for w, t in enumerate(traffics):
+        mono = pareto_front(sweep(t, **GRID_AXES))
+        assert np.array_equal(fronts[w].points, mono.points)
+
+
+def test_chunked_shard_flag_single_device_noop():
+    """shard=True must be a no-op (same results) on a single device; on
+    multi-device hosts it lays chunk columns across devices."""
+    a = sweep_chunked(TRAFFIC, _CollectReducer(), chunk_size=50, shard=True,
+                      **GRID_AXES)
+    b = sweep_chunked(TRAFFIC, _CollectReducer(), chunk_size=50, shard=False,
+                      **GRID_AXES)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-15, err_msg=k)
+
+
+def test_chunked_shard_multi_device_subprocess():
+    """Real NamedSharding coverage: 4 simulated host devices (subprocess so
+    the XLA flag applies), chunk size rounded up to a device multiple, and
+    the sharded streaming argmin must match the monolithic sweep."""
+    import subprocess
+    import sys
+    from pathlib import Path
+    code = (
+        "import jax, numpy as np\n"
+        "assert jax.device_count() == 4, jax.device_count()\n"
+        "from repro.core import CNN_WORKLOADS\n"
+        "from repro.core.sweep import sweep, sweep_chunked, MinReducer\n"
+        "t = CNN_WORKLOADS['ResNet18']().traffic()\n"
+        "axes = dict(n_gateways=(8, 16, 32, 64), n_lambda=(2, 4, 8, 16))\n"
+        "res = sweep(t, **axes)\n"
+        "i, _ = res.best('energy_j')\n"
+        "out = sweep_chunked(t, MinReducer('energy_j'), chunk_size=37,\n"
+        "                    shard=True, **axes)\n"
+        "assert out['index'] == i, (out['index'], i)\n"
+        "assert abs(out['value'] - res.metrics['energy_j'][i]) < 1e-12\n")
+    env = dict(os.environ)
+    repo = Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = (str(repo / "src") + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300, env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+
+
+def test_grid_spec_chunks_match_build_grid():
+    spec = grid_spec(("tree", "trine"), n_gateways=(16, 32),
+                     **{"mzi.insertion_loss_db": (0.5, 1.0, 2.0)})
+    grid = build_grid(("tree", "trine"), n_gateways=(16, 32),
+                      **{"mzi.insertion_loss_db": (0.5, 1.0, 2.0)})
+    assert spec.n == grid.n
+    cols, topo_id = spec.chunk_cols(5, 11)
+    assert np.array_equal(topo_id, grid.topo_id[5:11])
+    for k in grid.cols:
+        assert np.array_equal(cols[k], grid.cols[k][5:11]), k
+    for i in (0, 5, grid.n - 1):
+        cfg = spec.config_at(i)
+        assert cfg["topology"] == grid.row_topology(i)
+        assert cfg["n_gateways"] == grid.cols["n_gateways"][i]
+
+
+# ---------------------------------------------------------------------------
+# co-design grid search
+# ---------------------------------------------------------------------------
+
+
+def test_codesign_front_matches_bruteforce():
+    wl = CNN_WORKLOADS["LeNet5"]()
+    mixes = [[ChipletSpec(512, 32)],
+             [ChipletSpec(512, 9), ChipletSpec(512, 49)],
+             [ChipletSpec(256, 16), ChipletSpec(256, 64),
+              ChipletSpec(128, 128)]]
+    axes = dict(n_gateways=(16, 32), n_lambda=(4, 8))
+    front, spec = codesign_pareto(
+        wl, mixes, topologies=("trine", "tree", "elec"), chunk_size=5, **axes)
+    # brute force over the joint (mix x config) grid
+    from repro.core.accelerator import evaluate_accelerator_grid
+    from repro.core.sweep import _network_columns_arrays
+    cols, topo_id = spec.chunk_cols(0, spec.n)
+    nets = _network_columns_arrays(cols, topo_id, spec.topologies)
+    out = evaluate_accelerator_grid(
+        wl, mixes, nets, cols,
+        cols["n_mem_chiplets"] * cols["mem_bw_bytes_per_s"])
+    pts = np.stack([out[k] for k in OBJECTIVES], -1).reshape(-1, 3)
+    assert set(front.indices.tolist()) == set(
+        np.where(pareto_mask_reference(pts))[0].tolist())
+    # padded-mix kernel: the 1-chiplet mix must behave as if unpadded
+    assert out["latency_s"].shape == (3, spec.n)
+
+
+def test_accelerator_grid_device_corner_sweep_scalar_nets():
+    """(N,) device columns with scalar network fields must broadcast: a
+    device-corner sweep at a fixed network is a supported grid shape."""
+    from repro.core.accelerator import evaluate_accelerator_grid
+    from repro.core.devices import device_columns
+    from repro.core.topology import MODEL_FIELDS
+    from repro.core import trine_network
+    wl = CNN_WORKLOADS["LeNet5"]()
+    net = trine_network(NetworkParams())
+    nets = {f: np.float64(getattr(net, f)) for f in MODEL_FIELDS}
+    dev = dict(device_columns())
+    dev["mr.tuning_power_w"] = np.asarray([137e-6, 275e-6, 550e-6])
+    out = evaluate_accelerator_grid(wl, [[ChipletSpec(512, 32)]], nets, dev,
+                                    100e9)
+    assert out["latency_s"].shape == (1, 3)
+    # more trimming power per MR -> network energy must not decrease
+    assert np.all(np.diff(out["network_energy_j"][0]) >= 0)
+
+
+# ---------------------------------------------------------------------------
+# gradient refinement
+# ---------------------------------------------------------------------------
+
+
+def _scalar_log_edp(topology, traffic, **overrides):
+    """float64 scalar-dataclass-path log(EDP) — the FD reference."""
+    dev_leaves = {k: v for k, v in overrides.items() if "." in k}
+    params = {k: v for k, v in overrides.items() if "." not in k}
+    p = NetworkParams(**params)
+    d = replace_device_leaves(DEFAULT_DEVICES, dev_leaves)
+    net = TOPOLOGIES[topology](p, d=d)
+    rep = evaluate_network(net, traffic, d)
+    return np.log(rep.energy_j) + np.log(rep.latency_s)
+
+
+@pytest.mark.parametrize("axis,x0", [
+    ("modulation_rate_bps", 12e9),
+    ("mem_bw_bytes_per_s", 100e9),
+    ("mzi.insertion_loss_db", 1.0),
+])
+def test_grad_matches_finite_differences(axis, x0):
+    """One jax.grad step through the xp-generic trine kernel equals a
+    float64 central finite difference of the scalar reference path (in
+    log-log space, away from ceil/round quantization boundaries)."""
+    spec = grid_spec(("trine",))
+    cols = dict(spec.base)
+
+    def loss(theta):
+        c = {k: jnp.asarray(v) for k, v in cols.items()}
+        c[axis] = jnp.exp(theta)
+        fields = TOPOLOGY_ARRAYS["trine"](c, xp=jnp)
+        dev = {k: c[k] for k in EVAL_DEVICE_FIELDS}
+        m = eval_network_math(fields, dev, jnp.asarray(TRAFFIC.total_bits),
+                              jnp.asarray(float(TRAFFIC.n_transfers)),
+                              jnp.asarray(1.0))
+        return jnp.log(m["energy_j"]) + jnp.log(m["latency_s"])
+
+    theta0 = float(np.log(x0))
+    g = float(jax.grad(loss)(jnp.asarray(theta0, jnp.float32)))
+    h = 0.02
+    f_hi = _scalar_log_edp("trine", TRAFFIC, **{axis: float(np.exp(theta0 + h))})
+    f_lo = _scalar_log_edp("trine", TRAFFIC, **{axis: float(np.exp(theta0 - h))})
+    fd = (f_hi - f_lo) / (2 * h)
+    assert g == pytest.approx(fd, rel=5e-2, abs=5e-3), (g, fd)
+
+
+def test_refine_continuous_improves_and_respects_bounds():
+    t = CNN_WORKLOADS["ResNet18"]().traffic()
+    r = refine_continuous("trine", {"n_gateways": 32}, t, steps=25, lr=0.1,
+                          span=4.0)
+    assert r["refined_value"] <= r["start_value"]
+    for nm, v in r["refined"].items():
+        lo, hi = r["start"][nm] / 4.0, r["start"][nm] * 4.0
+        assert lo * (1 - 1e-9) <= v <= hi * (1 + 1e-9), nm
+    assert set(r["metrics"]) >= {"latency_s", "energy_j", "power_w"}
+
+
+def test_refine_front_point_from_pareto_search():
+    t = CNN_WORKLOADS["ResNet18"]().traffic()
+    axes = dict(n_gateways=(16, 32), n_lambda=(4, 8))
+    front = pareto_search(t, topologies=("trine", "tree"), **axes)
+    spec = grid_spec(("trine", "tree"), **axes)
+    r = refine_front_point(spec, t, int(front.indices[0]), steps=10, lr=0.1)
+    assert r["refined_value"] <= r["start_value"]
+    assert r["topology"] in ("trine", "tree")
