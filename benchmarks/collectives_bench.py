@@ -5,6 +5,13 @@ all-reduce, on the production multi-pod mesh geometry.
 Analytical on the (2,16,16) 512-chip mesh (ring-algorithm byte accounting —
 the same model validated against compiled HLO in tests/test_distributed.py),
 for representative gradient sizes of the assigned archs.
+
+Cross-pod serialization times are priced per fabric (`FABRIC_NAMES` presets
+from `repro.core.fabric`): the `*_time_s` columns keep their historical
+meaning (metallic ICI baseline — `DEFAULT_FABRIC`), and each schedule
+additionally gets `{schedule}_time_{fabric}_s` columns including per-hop
+link latency, so the schedule choice and the link design point can be
+traded off in one table.
 """
 
 from __future__ import annotations
@@ -23,8 +30,8 @@ class _MeshLike:
         self.devices = np.empty(shape, dtype=object)
 
 
+from repro.core.fabric import DEFAULT_FABRIC, get_fabric
 from repro.parallel.collectives import collective_bytes_estimate
-from repro.launch.hlo_analysis import ICI_BW
 
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
 
@@ -35,9 +42,17 @@ GRAD_SIZES = {
     "grok-1-314b": 314e9,
 }
 
+FABRIC_NAMES = ("metallic_ici", "trine_siph", "tree_siph")
+
+# cross-pod hop count per schedule (for the fabric link-latency term):
+# flat = one global AR; trine = the cross-pod AR stage; trine_int8 = the
+# int8-payload + f32-scale gathers of the cross-pod stage.
+_N_CROSS_HOPS = {"flat": 1, "trine": 1, "trine_int8": 2}
+
 
 def run(csv: bool = True) -> dict:
     mesh = _MeshLike((2, 16, 16), ("pod", "data", "model"))
+    fabrics = [get_fabric(f) for f in FABRIC_NAMES]
     rows = []
     t0 = time.perf_counter()
     for arch, n in GRAD_SIZES.items():
@@ -47,7 +62,11 @@ def run(csv: bool = True) -> dict:
         row = {"arch": arch}
         for s, e in ests.items():
             row[f"{s}_cross_pod_gb"] = e["cross_pod_bytes"] / 1e9
-            row[f"{s}_time_s"] = e["cross_pod_bytes"] / ICI_BW
+            row[f"{s}_time_s"] = e["cross_pod_bytes"] / \
+                DEFAULT_FABRIC.cross_pod_bw_bytes_per_s
+            for fb in fabrics:
+                row[f"{s}_time_{fb.name}_s"] = fb.collective_s(
+                    e["cross_pod_bytes"], _N_CROSS_HOPS[s])
         row["trine_speedup"] = (ests["flat"]["cross_pod_bytes"]
                                 / max(ests["trine"]["cross_pod_bytes"], 1))
         row["int8_speedup"] = (ests["flat"]["cross_pod_bytes"]
@@ -64,7 +83,8 @@ def run(csv: bool = True) -> dict:
                   f"flat={r['flat_cross_pod_gb']:.3f}GB;"
                   f"trine={r['trine_cross_pod_gb']:.3f}GB;"
                   f"int8={r['trine_int8_cross_pod_gb']:.3f}GB;"
-                  f"speedup={r['trine_speedup']:.1f}x/{r['int8_speedup']:.1f}x")
+                  f"speedup={r['trine_speedup']:.1f}x/{r['int8_speedup']:.1f}x;"
+                  f"int8_trine_siph={r['trine_int8_time_trine_siph_s']*1e3:.2f}ms")
     return out
 
 

@@ -5,6 +5,13 @@ and the MODEL_FLOPS/HLO_FLOPS useful-compute ratio.
 Reads benchmarks/artifacts/dryrun/*.json (produced by repro.launch.dryrun).
 Emits CSV rows for benchmarks.run and a markdown table for EXPERIMENTS.md.
 
+Fabric what-if columns: each measured cell is additionally re-priced under
+the named link models in `FABRIC_NAMES` (`repro.core.fabric` presets —
+metallic ICI baseline vs photonic interposer designs), showing how the
+collective term, bottleneck, and MFU bound move with the network design
+point.  The deeper search-driven version — re-ranking the co-design Pareto
+frontier by end-to-end step time — lives in `benchmarks.fabric_whatif`.
+
 Also emits the photonic-accelerator roofline (paper Sec. V decomposition):
 per (accelerator variant x CNN) the compute / interposer-network / memory
 terms and the dominant bottleneck, computed through the batched sweep-engine
@@ -21,6 +28,7 @@ from repro.core import (
     crosslight_25d_elec,
     crosslight_25d_siph,
     evaluate_accelerator_batch,
+    get_fabric,
     monolithic_crosslight,
 )
 from repro.launch.hlo_analysis import PEAK_FLOPS
@@ -98,6 +106,57 @@ def markdown_table(mesh="single") -> str:
     return "\n".join(rows)
 
 
+FABRIC_NAMES = ("metallic_ici", "trine_siph", "tree_siph")
+
+
+def fabric_terms(r, fabric) -> dict:
+    """Re-price one measured dry-run cell under a different fabric: same HLO
+    FLOPs/bytes, but the three roofline denominators come from the fabric's
+    link model.  `fabric` is anything `core.fabric.get_fabric` accepts."""
+    fb = get_fabric(fabric)
+    rf = r["roofline"]
+    n_coll = float(sum(r.get("collective_op_counts", {}).values()))
+    compute_s = rf["flops"] / fb.peak_flops
+    memory_s = rf["hbm_bytes"] / fb.hbm_bw_bytes_per_s
+    collective_s = fb.collective_s(rf["collective_bytes"], n_coll)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms.values())
+    useful = rf["model_flops"] / fb.peak_flops
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "fabric": fb.name,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": max(terms, key=terms.get),
+        "mfu_bound": useful / bound if bound > 0 else 0.0,
+    }
+
+
+def fabric_cells(cells=None, fabrics=FABRIC_NAMES) -> list:
+    """Fabric what-if rows for every ok dry-run cell: cell x fabric terms.
+    Empty when no dry-run artifacts exist (benchmarks.fabric_whatif covers
+    that case with analytic cells)."""
+    if cells is None:
+        cells = [c for c in load_cells() if c["status"] == "ok"]
+    return [fabric_terms(r, f) for r in cells
+            if r.get("status", "ok") == "ok" for f in fabrics]
+
+
+def fabric_markdown_table(rows=None) -> str:
+    rows = fabric_cells() if rows is None else rows
+    out = ["| arch | shape | fabric | compute (ms) | memory (ms) | "
+           "collective (ms) | bottleneck | MFU bound |",
+           "|---|---|---|---:|---:|---:|---|---:|"]
+    for s in rows:
+        out.append(
+            f"| {s['arch']} | {s['shape']} | {s['fabric']} | "
+            f"{s['compute_s'] * 1e3:.1f} | {s['memory_s'] * 1e3:.1f} | "
+            f"{s['collective_s'] * 1e3:.1f} | **{s['bottleneck']}** | "
+            f"{s['mfu_bound']:.3f} |")
+    return "\n".join(out)
+
+
 def photonic_roofline() -> list:
     """Per (accelerator variant x CNN): compute / network / memory seconds
     and the dominant term, via the batched accelerator evaluator."""
@@ -137,9 +196,14 @@ def run(csv: bool = True) -> dict:
     skip = [c for c in cells if c["status"] == "skip"]
     err = [c for c in cells if c["status"] not in ("ok", "skip")]
     photonic = photonic_roofline()
+    fabric = fabric_cells(ok)
     out = {"n_ok": len(ok), "n_skip": len(skip), "n_err": len(err),
-           "photonic": photonic}
+           "photonic": photonic, "fabric": fabric}
     if csv:
+        for s in fabric:
+            print(f"roofline/fabric/{s['arch']}/{s['shape']}/{s['fabric']},0,"
+                  f"col={s['collective_s'] * 1e3:.1f}ms;"
+                  f"bot={s['bottleneck']};mfu_bound={s['mfu_bound']:.3f}")
         for r in photonic:
             print(f"roofline/photonic/{r['accel']}/{r['cnn']},0,"
                   f"cmp={r['compute_s'] * 1e3:.3f}ms;"
@@ -166,5 +230,8 @@ if __name__ == "__main__":
     _out = run()
     print()
     print(markdown_table("single"))
+    if _out["fabric"]:
+        print()
+        print(fabric_markdown_table(_out["fabric"]))
     print()
     print(photonic_markdown_table(_out["photonic"]))

@@ -24,9 +24,35 @@ from benchmarks import sweep_bench         # batched vs scalar sweep engine
 from benchmarks import pareto_bench        # Pareto/co-design search engine
 from benchmarks import collectives_bench   # Layer-B collective schedules
 from benchmarks import roofline            # §Roofline report
+from benchmarks import fabric_whatif       # frontier fabrics -> step time
 from benchmarks import photonic_mac_bench  # kernel microbench
 
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+# artifacts/fabric_whatif.json contract consumed by downstream reports
+FABRIC_WHATIF_SCHEMA = {
+    "fabrics": list, "cells": list, "results": list, "ranking": list,
+    "frontier_ranking": list, "checks": dict, "pass": bool,
+}
+_FABRIC_RESULT_KEYS = ("arch", "shape", "fabric", "compute_s", "memory_s",
+                       "collective_s", "step_s", "bottleneck")
+
+
+def check_fabric_whatif_schema(res: dict) -> dict:
+    """Schema gate for the fabric what-if artifact: top-level keys typed per
+    FABRIC_WHATIF_SCHEMA, every result row carrying the roofline terms, and
+    >= 3 fabrics including a co-design frontier point."""
+    shape_ok = all(isinstance(res.get(k), t)
+                   for k, t in FABRIC_WHATIF_SCHEMA.items())
+    rows_ok = shape_ok and all(
+        all(k in r for k in _FABRIC_RESULT_KEYS) for r in res["results"])
+    return {
+        "schema_keys": shape_ok,
+        "schema_result_rows": rows_ok,
+        "schema_fabric_count": shape_ok and len(res["fabrics"]) >= 3,
+        "schema_has_frontier": shape_ok and any(
+            f.get("kind") == "frontier" for f in res["fabrics"]),
+    }
 
 
 def build_summary(results: dict) -> dict:
@@ -47,6 +73,14 @@ def build_summary(results: dict) -> dict:
             if required is not None and k not in required:
                 continue
             checks[f"{name}/{k}"] = bool(v)
+
+    # fabric what-if gates: artifact schema + the bottleneck-flip contract
+    # (its own checks dict — folded above — already requires a flip between
+    # metallic_ici and a frontier photonic fabric)
+    fw = results.get("fabric_whatif")
+    if fw:
+        for k, v in check_fabric_whatif_schema(fw).items():
+            checks[f"fabric_whatif/{k}"] = bool(v)
 
     perf = {}
     sweep_res = results.get("sweep")
@@ -95,6 +129,8 @@ def main() -> None:
     results["photonic_mac"] = photonic_mac_bench.run()
     print("# roofline (from dry-run artifacts)")
     results["roofline"] = roofline.run()
+    print("# fabric what-if: frontier fabrics vs end-to-end step time")
+    results["fabric_whatif"] = fabric_whatif.run()
 
     summary = write_summary(results)
     print("# consolidated summary -> artifacts/summary.json")

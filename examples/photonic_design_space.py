@@ -189,6 +189,33 @@ def codesign_search():
           f"chiplet-mix) points -> {front.size} frontier points")
     print(f"  best-EDP: {cfg['topology']} interposer, chiplet vecs [{vecs}], "
           f"G={cfg['n_gateways']:g}, lambda={cfg['n_lambda']:g}")
+    return front, spec, mixes
+
+
+def fabric_whatif(front, spec, mixes):
+    """Frontier -> Fabric link models -> Layer-B roofline what-if: price one
+    LLM serving cell (yi_34b decode) under the metallic ICI baseline and
+    each deduped frontier design (core.fabric closes the search->system
+    loop; benchmarks.fabric_whatif is the full arch x shape version)."""
+    print("=" * 72)
+    from repro.core import fabrics_from_front, metallic_ici
+    from repro.launch.hlo_analysis import HloStats, roofline
+
+    fabs = [metallic_ici()] + fabrics_from_front(
+        front, spec, mixes=mixes, max_fabrics=3)
+    # a decode step on the (2,16,16) mesh: TP all-reduces dominate the wire
+    stats = HloStats(dot_flops=1.7e10, dot_bytes=0.0, op_result_bytes=0.0,
+                     collective_bytes=25.8e6, collective_op_bytes={},
+                     collective_op_counts={"all-reduce": 121}, max_trip=1,
+                     collective_bytes_raw=25.8e6)
+    print(f"Fabric what-if (yi_34b decode cell): {len(fabs)} fabrics from "
+          f"{front.size} frontier points")
+    for fb in fabs:
+        rf = roofline(stats, {}, stats.dot_flops, io_bytes=2.15e9, fabric=fb)
+        step = max(rf.compute_s, rf.memory_s, rf.collective_s)
+        print(f"  {fb.name:24s} cross-pod {fb.cross_pod_bw_bytes_per_s / 1e9:6.1f} GB/s: "
+              f"step {step * 1e3:6.2f} ms, collective {rf.collective_s * 1e3:6.2f} ms "
+              f"-> {rf.bottleneck}-bound")
 
 
 if __name__ == "__main__":
@@ -197,4 +224,4 @@ if __name__ == "__main__":
     sweep_trimming_sensitivity()
     sweep_full_design_space()
     pareto_and_refine()
-    codesign_search()
+    fabric_whatif(*codesign_search())

@@ -24,6 +24,14 @@ from repro.core.planner import (
     plan_gateway_activation,
     plan_collective_channels,
 )
+from repro.core.fabric import (
+    Fabric,
+    DEFAULT_FABRIC,
+    FABRIC_PRESETS,
+    fabrics_from_front,
+    get_fabric,
+    metallic_ici,
+)
 from repro.core.workloads import Workload, Layer, CNN_WORKLOADS, gemm_workload
 from repro.core.accelerator import (
     AcceleratorConfig,
@@ -55,6 +63,7 @@ from repro.core.sweep import (
 from repro.core.search import (
     ParetoFront,
     codesign_pareto,
+    frontier_configs,
     pareto_front,
     pareto_mask,
     pareto_search,

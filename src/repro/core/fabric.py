@@ -1,0 +1,272 @@
+"""Fabric: one network design point as the Layer-B link model.
+
+The bridge between the two halves of this repo.  Layer A (core.topology /
+core.power / core.search) scores interposer-network *designs*; Layer B
+(launch.hlo_analysis, core.planner, parallel.collectives) prices *programs*
+— roofline terms, collective schedules, channel plans — but historically did
+so against hard-coded metallic-link constants (50 GB/s ICI).  A `Fabric`
+converts any design point — a named preset, a `NetworkModel`, a config dict
+from `GridSpec.config_at` / `codesign_config_at`, or a whole
+`core.search` Pareto frontier — into the link numbers the Layer-B estimate
+path consumes:
+
+  cross_pod_bw_bytes_per_s   the slow inter-pod link (replaces ICI_BW in the
+                             roofline collective term and the channel
+                             planner): effective_bw_bps / 8 of the network.
+  intra_pod_bw_bytes_per_s   subnetwork-provisioned bandwidth inside a pod
+                             (aggregate_bw_bps / 8 — parallel subnetworks /
+                             waveguides all usable for local stages).
+  link_latency_s             fixed per-collective overhead (arbitration or
+                             MZI switching), from per_transfer_s.
+  energy_per_bit_j           network energy per wire bit, from the Layer-A
+                             power model under a probe traffic.
+  hbm_bw_bytes_per_s /       chip-local constants, carried so a Fabric fully
+  peak_flops                 determines a roofline evaluation.
+
+`DEFAULT_FABRIC` is the metallic-ICI TPU-class preset and reproduces the
+pre-fabric constants exactly (its link latency is 0: the old model lumped
+per-hop costs into the bandwidth term), so estimates under the default are
+byte-identical to the historical path.
+
+Entry points:
+
+  metallic_ici() / FABRIC_PRESETS / get_fabric(name)
+  Fabric.from_network_model(net)       any core.topology NetworkModel
+  Fabric.from_config(cfg)              a config dict (topology + axis
+                                       overrides) as emitted by
+                                       GridSpec.config_at or
+                                       codesign_config_at
+  fabrics_from_front(front, spec)      one Fabric per distinct network
+                                       design on a Pareto frontier — the
+                                       search -> system loop closed
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.devices import DeviceLibrary, DEFAULT_DEVICES
+from repro.core.power import Traffic, evaluate_network
+from repro.core.topology import (
+    NetworkModel,
+    NetworkParams,
+    model_from_row,
+    TOPOLOGY_ARRAYS,
+    sprint_bus,
+    spacx_bus,
+    tree_network,
+    trine_network,
+    electrical_mesh,
+)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.search import ParetoFront
+    from repro.core.sweep import GridSpec
+
+__all__ = [
+    "Fabric", "DEFAULT_FABRIC", "FABRIC_PRESETS", "get_fabric",
+    "metallic_ici", "fabrics_from_front",
+    "DEFAULT_PEAK_FLOPS", "DEFAULT_HBM_BW", "METALLIC_ICI_BW",
+]
+
+# TPU v5e-class chip constants (per assignment); the single source of truth —
+# launch.hlo_analysis re-exports these as PEAK_FLOPS / HBM_BW / ICI_BW.
+DEFAULT_PEAK_FLOPS = 197e12    # bf16 FLOP/s per chip
+DEFAULT_HBM_BW = 819e9         # bytes/s HBM per chip
+METALLIC_ICI_BW = 50e9         # bytes/s per metallic ICI link
+
+# probe traffic used to extract an energy-per-bit figure from the Layer-A
+# power model (large enough that per-transfer overheads are amortized)
+_PROBE = Traffic(bytes_read=1 << 30, bytes_written=1 << 30, n_transfers=16)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """One network design point, reduced to the Layer-B link model."""
+
+    name: str
+    cross_pod_bw_bytes_per_s: float
+    intra_pod_bw_bytes_per_s: float
+    hbm_bw_bytes_per_s: float = DEFAULT_HBM_BW
+    peak_flops: float = DEFAULT_PEAK_FLOPS
+    link_latency_s: float = 0.0       # fixed per-collective overhead
+    energy_per_bit_j: float = 0.0     # network energy per wire bit
+    source: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    # ---- roofline terms -------------------------------------------------
+    def compute_s(self, flops: float) -> float:
+        return flops / self.peak_flops
+
+    def memory_s(self, hbm_bytes: float) -> float:
+        return hbm_bytes / self.hbm_bw_bytes_per_s
+
+    def collective_s(self, wire_bytes: float, n_collectives: float = 0.0
+                     ) -> float:
+        """Serialization on the slow (cross-pod) link + fixed per-collective
+        switching/arbitration overhead."""
+        return (wire_bytes / self.cross_pod_bw_bytes_per_s
+                + n_collectives * self.link_latency_s)
+
+    def collective_energy_j(self, wire_bytes: float) -> float:
+        return 8.0 * wire_bytes * self.energy_per_bit_j
+
+    # ---- constructors ---------------------------------------------------
+    @classmethod
+    def from_network_model(
+        cls,
+        net: NetworkModel,
+        name: Optional[str] = None,
+        devices: Optional[DeviceLibrary] = None,
+        *,
+        hbm_bw_bytes_per_s: float = DEFAULT_HBM_BW,
+        peak_flops: float = DEFAULT_PEAK_FLOPS,
+        source: Optional[Mapping[str, float]] = None,
+    ) -> "Fabric":
+        """Reduce a Layer-A `NetworkModel` to fabric link numbers.
+
+        Cross-pod bandwidth is the *effective* (contention-derated) network
+        bandwidth — the shared stage every hierarchical collective must
+        cross; intra-pod bandwidth is the aggregate (subnetworks/waveguides
+        run in parallel for pod-local stages).  Energy per bit comes from
+        the full Layer-A power model under a probe traffic, so laser sizing
+        and trimming are amortized in, not just the dynamic term.
+        """
+        rep = evaluate_network(net, _PROBE, devices or DEFAULT_DEVICES)
+        cross = net.effective_bw_bps / 8.0
+        intra = max(net.aggregate_bw_bps / 8.0, cross)
+        return cls(
+            name=name or net.name,
+            cross_pod_bw_bytes_per_s=cross,
+            intra_pod_bw_bytes_per_s=intra,
+            hbm_bw_bytes_per_s=hbm_bw_bytes_per_s,
+            peak_flops=peak_flops,
+            link_latency_s=net.per_transfer_s,
+            energy_per_bit_j=rep.energy_per_bit_j,
+            source=dict(source or {}),
+        )
+
+    @classmethod
+    def from_config(
+        cls,
+        cfg: Mapping[str, object],
+        name: Optional[str] = None,
+        devices: Optional[DeviceLibrary] = None,
+        **kwargs,
+    ) -> "Fabric":
+        """Build a Fabric from a config dict — the format `GridSpec.
+        config_at`, `SweepResult.config_at`, and `codesign_config_at`
+        emit: a "topology" key plus swept-axis overrides (NetworkParams
+        fields, dotted device leaves, "n_subnetworks").  Chiplet-mix keys
+        ("mix", "chiplets") are ignored: the mix changes compute, not the
+        interposer link model."""
+        from repro.core.sweep import grid_spec  # local: avoid import cycle
+
+        cfg = dict(cfg)
+        topology = str(cfg.pop("topology"))
+        cfg.pop("mix", None)
+        cfg.pop("chiplets", None)
+        if topology not in TOPOLOGY_ARRAYS:
+            raise KeyError(f"unknown topology {topology!r}")
+        spec = grid_spec((topology,), devices=devices)
+        cols = dict(spec.base)
+        for k, v in cfg.items():
+            if k not in cols:
+                raise KeyError(f"unknown config column {k!r}")
+            cols[k] = float(v)
+        cols_arr = {k: np.float64(v) for k, v in cols.items()}
+        net = model_from_row(TOPOLOGY_ARRAYS[topology](cols_arr),
+                             topology)
+        src = {"topology": topology}
+        src.update({k: float(v) for k, v in cfg.items()})
+        return cls.from_network_model(
+            net, name=name or f"{topology}-cfg", devices=devices,
+            source=src, **kwargs)
+
+
+def metallic_ici() -> Fabric:
+    """TPU-class metallic baseline: the pre-fabric hard-coded link model.
+    Link latency is 0 because the historical model lumped per-hop costs into
+    the bandwidth term — keeping it makes default-fabric estimates
+    byte-identical to the old constants.  ~5 pJ/bit is a typical electrical
+    SerDes + wire figure."""
+    return Fabric(
+        name="metallic_ici",
+        cross_pod_bw_bytes_per_s=METALLIC_ICI_BW,
+        intra_pod_bw_bytes_per_s=METALLIC_ICI_BW,
+        hbm_bw_bytes_per_s=DEFAULT_HBM_BW,
+        peak_flops=DEFAULT_PEAK_FLOPS,
+        link_latency_s=0.0,
+        energy_per_bit_j=5e-12,
+    )
+
+
+DEFAULT_FABRIC = metallic_ici()
+
+
+def _preset(factory, name: str) -> Fabric:
+    return Fabric.from_network_model(factory(NetworkParams()), name=name)
+
+
+FABRIC_PRESETS = {
+    "metallic_ici": metallic_ici,
+    "trine_siph": lambda: _preset(trine_network, "trine_siph"),
+    "tree_siph": lambda: _preset(tree_network, "tree_siph"),
+    "sprint_siph": lambda: _preset(sprint_bus, "sprint_siph"),
+    "spacx_siph": lambda: _preset(spacx_bus, "spacx_siph"),
+    "elec_mesh": lambda: _preset(electrical_mesh, "elec_mesh"),
+}
+
+
+def get_fabric(fabric) -> Fabric:
+    """Resolve a Fabric, a preset name, or pass through None -> default."""
+    if fabric is None:
+        return DEFAULT_FABRIC
+    if isinstance(fabric, Fabric):
+        return fabric
+    if isinstance(fabric, str):
+        if fabric not in FABRIC_PRESETS:
+            raise KeyError(
+                f"unknown fabric preset {fabric!r}; presets: "
+                f"{sorted(FABRIC_PRESETS)}")
+        return FABRIC_PRESETS[fabric]()
+    raise TypeError(f"expected Fabric | preset name | None, got {fabric!r}")
+
+
+def fabrics_from_front(
+    front: "ParetoFront",
+    spec: "GridSpec",
+    mixes: Optional[Sequence] = None,
+    devices: Optional[DeviceLibrary] = None,
+    max_fabrics: Optional[int] = None,
+    prefix: str = "pareto",
+    **kwargs,
+) -> List[Fabric]:
+    """One Fabric per *distinct network design* on a Pareto frontier.
+
+    Frontier rows from `codesign_pareto` encode (chiplet mix x network
+    config); different mixes over the same network collapse to one fabric
+    (the mix changes compute, not the link model).  Fabrics are named
+    ``{prefix}:{topology}@{flat_index}`` so what-if artifacts trace back to
+    the exact frontier row.  `max_fabrics` keeps what-if tables bounded
+    (first-come in the front's canonical order)."""
+    from repro.core.search import frontier_configs  # local: import cycle
+
+    out: List[Fabric] = []
+    seen = set()
+    for idx, cfg in zip(front.indices, frontier_configs(front, spec, mixes)):
+        net_cfg = {k: v for k, v in cfg.items()
+                   if k not in ("mix", "chiplets")}
+        key = tuple(sorted((k, float(v) if k != "topology" else v)
+                           for k, v in net_cfg.items()))
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(Fabric.from_config(
+            net_cfg, name=f"{prefix}:{net_cfg['topology']}@{int(idx)}",
+            devices=devices, **kwargs))
+        if max_fabrics is not None and len(out) >= max_fabrics:
+            break
+    return out

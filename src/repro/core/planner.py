@@ -43,33 +43,51 @@ def _asx(xp, v):
 
 
 def choose_subnetworks_arr(n_lambda, modulation_rate_bps, n_mem_chiplets,
-                           mem_bw_bytes_per_s, n_gateways, xp=np):
+                           mem_bw_bytes_per_s, n_gateways, xp=np,
+                           round_mode: str = "paper"):
     """Vectorized K*: elementwise over struct-of-arrays parameter columns
     (the sweep-engine path; `choose_subnetworks` is the scalar wrapper).
     Pass ``xp=jax.numpy`` to trace it inside a jitted/differentiated kernel;
-    the round/ceil quantization is piecewise-constant (zero gradient)."""
+    the round/ceil quantization is piecewise-constant (zero gradient).
+
+    `round_mode` picks the power-of-two snap for the raw K = ceil(mem/wg):
+      "paper"  nearest power of two (the paper's 9 -> 8 choice) — may round
+               DOWN below the memory bandwidth,
+      "cover"  next power of two up — the smallest pow2 K that actually
+               covers mem_bw (never under-provisions).
+    Both are clamped to the gateway count."""
     wg_bw = _asx(xp, n_lambda) * _asx(xp, modulation_rate_bps)
     mem_bw = _asx(xp, n_mem_chiplets) * _asx(xp, mem_bw_bytes_per_s) * 8.0
     k = xp.maximum(1.0, xp.ceil(mem_bw / wg_bw))
     # power-of-two so subnet trees stay balanced (paper uses 8)
-    k_pow2 = 2.0 ** xp.round(xp.log2(k))
+    if round_mode == "paper":
+        k_pow2 = 2.0 ** xp.round(xp.log2(k))
+    elif round_mode == "cover":
+        k_pow2 = 2.0 ** xp.ceil(xp.log2(k))
+    else:
+        raise ValueError(
+            f"round_mode must be 'paper' or 'cover', got {round_mode!r}")
     return xp.minimum(k_pow2, _asx(xp, n_gateways))
 
 
-def choose_subnetworks(p: "NetworkParams") -> int:
-    """K* = smallest K with K * (n_lambda * rate) >= total memory bandwidth.
+def choose_subnetworks(p: "NetworkParams", round_mode: str = "paper") -> int:
+    """Subnetwork count K for TRINE, a power of two clamped to the gateway
+    count.
 
-    With the paper's numbers (4 mem chiplets x 100 GB/s is bounded by the
-    per-chiplet microbump budget; the TRINE eval provisions against one
+    With the paper's numbers (the TRINE eval provisions against one
     100 GB/s memory interface per subnet group): 100 GB/s = 800 Gb/s,
-    waveguide = 8 lambda * 12 Gb/s = 96 Gb/s  =>  K = ceil(800/96) = 9 -> the
-    paper rounds to the power-of-two 8 ("we opted for 8 subnetworks to use
-    the maximum bandwidth offered by memory chiplets").  We reproduce the
-    paper's choice: round to the nearest power of two <= gateway count.
+    waveguide = 8 lambda * 12 Gb/s = 96 Gb/s  =>  raw K = ceil(800/96) = 9.
+    The default ``round_mode="paper"`` reproduces the paper's choice — the
+    NEAREST power of two (9 -> 8: "we opted for 8 subnetworks to use the
+    maximum bandwidth offered by memory chiplets") — which can round DOWN
+    below the memory bandwidth it nominally matches.  Pass
+    ``round_mode="cover"`` for the smallest power-of-two K with
+    K * wg_bw >= mem_bw (next power of two up; 9 -> 16), which never
+    under-provisions.
     """
     return int(choose_subnetworks_arr(
         p.n_lambda, p.modulation_rate_bps, p.n_mem_chiplets,
-        p.mem_bw_bytes_per_s, p.n_gateways))
+        p.mem_bw_bytes_per_s, p.n_gateways, round_mode=round_mode))
 
 
 def plan_gateway_activation_arr(demand_bytes_per_s, max_bw_bytes_per_s,
@@ -101,9 +119,10 @@ def plan_gateway_activation(
 def plan_collective_channels(
     collective_bytes: float,
     overlap_window_s: float,
-    link_bw_bytes_per_s: float,
+    link_bw_bytes_per_s: float = None,
     max_channels: int = 8,
     min_chunk_bytes: float = 1 << 20,
+    fabric=None,
 ) -> int:
     """Layer B bandwidth matching: number of parallel collective channels
     (chunks in flight) so transfer time ~= the compute window it hides under.
@@ -111,7 +130,20 @@ def plan_collective_channels(
     channels = ceil(bytes / (window * bw)) -- i.e. provision exactly enough
     parallelism, never more (TRINE: "without wasting network resources").
     Clamped so chunks stay large enough to amortize per-collective latency.
+
+    The link bandwidth may be given directly (`link_bw_bytes_per_s`) or
+    derived from a network design point (`fabric` — a `core.fabric.Fabric`,
+    a preset name like "trine_siph", or anything with a
+    ``cross_pod_bw_bytes_per_s`` attribute); `fabric` wins when both are
+    passed, since it reflects the design under evaluation.
     """
+    if fabric is not None:
+        link_bw_bytes_per_s = getattr(fabric, "cross_pod_bw_bytes_per_s", None)
+        if link_bw_bytes_per_s is None:
+            from repro.core.fabric import get_fabric  # runtime: no cycle
+            link_bw_bytes_per_s = get_fabric(fabric).cross_pod_bw_bytes_per_s
+    if link_bw_bytes_per_s is None:
+        raise ValueError("pass link_bw_bytes_per_s or fabric")
     if collective_bytes <= 0:
         return 1
     need = collective_bytes / max(overlap_window_s * link_bw_bytes_per_s, 1e-30)

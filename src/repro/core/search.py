@@ -72,8 +72,8 @@ from repro.core.workloads import Workload
 __all__ = [
     "OBJECTIVES", "pareto_mask", "pareto_mask_reference", "ParetoFront",
     "merge_fronts", "pareto_front", "ParetoReducer", "pareto_search",
-    "codesign_pareto", "codesign_config_at", "refine_continuous",
-    "refine_front_point", "DEFAULT_REFINE_AXES",
+    "codesign_pareto", "codesign_config_at", "frontier_configs",
+    "refine_continuous", "refine_front_point", "DEFAULT_REFINE_AXES",
 ]
 
 # the paper's three reported quantities, all minimized
@@ -455,6 +455,20 @@ def codesign_config_at(spec: GridSpec, mixes: Sequence, flat_index: int
     out: Dict[str, object] = {"mix": mix_id, "chiplets": list(mixes[mix_id])}
     out.update(spec.config_at(row))
     return out
+
+
+def frontier_configs(front: ParetoFront, spec: GridSpec,
+                     mixes: Optional[Sequence] = None
+                     ) -> List[Dict[str, object]]:
+    """Decode every frontier row of `front` into a config dict, in the
+    front's canonical order.  Pass `mixes` for co-design fronts (flat index
+    = mix_id * spec.n + grid_row -> dict with "mix"/"chiplets" keys); omit
+    it for plain network fronts (flat index = grid row).  The dicts are
+    directly consumable by `core.fabric.Fabric.from_config`."""
+    if mixes is not None:
+        return [codesign_config_at(spec, mixes, int(i))
+                for i in front.indices]
+    return front.configs(spec)
 
 
 # --------------------------------------------------------------------------

@@ -27,7 +27,12 @@ element count has a narrower dtype, the wire bytes are counted at that width.
 
 Raw cost_analysis numbers are kept in the artifacts as the uncorrected
 cross-check.  Hardware constants (TPU v5e-class target, per assignment):
-197 TFLOP/s bf16/chip ; 819 GB/s HBM ; ~50 GB/s/link ICI.
+197 TFLOP/s bf16/chip ; 819 GB/s HBM ; ~50 GB/s/link ICI.  Those constants
+are the `metallic_ici` default of `repro.core.fabric` — `roofline(...)`
+accepts any other `Fabric` (a preset name or a co-design frontier point)
+and prices the collective term against that design's cross-pod link
+instead; `PEAK_FLOPS`/`HBM_BW`/`ICI_BW` remain as module aliases of the
+default fabric for existing callers.
 """
 
 from __future__ import annotations
@@ -36,9 +41,12 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+from repro.core.fabric import DEFAULT_FABRIC, get_fabric
+
+# back-compat aliases: the metallic default fabric's constants
+PEAK_FLOPS = DEFAULT_FABRIC.peak_flops
+HBM_BW = DEFAULT_FABRIC.hbm_bw_bytes_per_s
+ICI_BW = DEFAULT_FABRIC.cross_pod_bw_bytes_per_s
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -205,10 +213,15 @@ class HloStats:
 
 
 def _operand_names(rhs: str) -> List[str]:
+    """Operand op names of an instruction.  Compiled `as_text()` prints each
+    operand with its shape inline (``fusion(f32[2048]{0} %x, s8[64]{0} %q)``),
+    so take the LAST whitespace token of each argument — on shape-less
+    synthetic HLO that token is the whole argument."""
     args = re.search(r"\(([^)]*)\)", rhs)
     if not args:
         return []
-    return [a.strip().lstrip("%") for a in args.group(1).split(",") if a.strip()]
+    return [a.strip().split()[-1].lstrip("%")
+            for a in args.group(1).split(",") if a.strip()]
 
 
 _PASSTHROUGH = re.compile(
@@ -356,7 +369,8 @@ def analyze_hlo(hlo: str, n_devices: int) -> HloStats:
                 operand_bytes = 0.0
                 args = re.search(r"\(([^)]*)\)", rhs)
                 if args:
-                    names = [a.strip().lstrip("%") for a in args.group(1).split(",")]
+                    names = [a.strip().split()[-1].lstrip("%")
+                             for a in args.group(1).split(",") if a.strip()]
                     # operand bytes at their TRUE dtype: the CPU backend wraps
                     # bf16 dot operands in f32 convert-pair fusions (see
                     # module docstring); a TPU build reads bf16 from HBM.
@@ -466,22 +480,35 @@ class RooflineTerms:
     useful_flops_frac: float
     raw_cost_flops: float         # uncorrected cost_analysis (cross-check)
     raw_cost_bytes: float
+    fabric: str = "metallic_ici"  # name of the fabric that priced the terms
 
     def to_json(self):
         return dataclasses.asdict(self)
 
 
 def roofline(stats: HloStats, cost: dict,
-             model_flops_per_device: float, io_bytes: float = 0.0) -> RooflineTerms:
+             model_flops_per_device: float, io_bytes: float = 0.0,
+             fabric=None) -> RooflineTerms:
     """Memory term = dot operand/result traffic + program I/O (params/state
     read+written once).  Elementwise chains are assumed fused into the dots
     (the TPU compiler does); `op_result_bytes` is kept as the no-fusion upper
-    bound in the artifact."""
+    bound in the artifact.
+
+    `fabric` prices the terms against one network design point (a
+    `repro.core.fabric.Fabric`, a preset name like "trine_siph", or None for
+    the metallic default).  The collective term charges the cross-pod link
+    plus the fabric's fixed per-collective latency (MZI switching /
+    arbitration); the default fabric has zero per-collective latency and the
+    historical constants, so results under it are byte-identical to the
+    pre-fabric path."""
+    fb = get_fabric(fabric)
     flops = stats.dot_flops
     hbm = stats.dot_bytes + io_bytes
-    compute_s = flops / PEAK_FLOPS
-    memory_s = hbm / HBM_BW
-    collective_s = stats.collective_bytes / ICI_BW
+    compute_s = fb.compute_s(flops)
+    memory_s = fb.memory_s(hbm)
+    collective_s = fb.collective_s(
+        stats.collective_bytes,
+        float(sum(stats.collective_op_counts.values())))
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": collective_s}
     bottleneck = max(terms, key=terms.get)
@@ -493,4 +520,5 @@ def roofline(stats: HloStats, cost: dict,
         useful_flops_frac=(model_flops_per_device / flops) if flops else 0.0,
         raw_cost_flops=float(cost.get("flops", -1.0)),
         raw_cost_bytes=float(cost.get("bytes accessed", -1.0)),
+        fabric=fb.name,
     )

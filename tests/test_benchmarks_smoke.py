@@ -78,19 +78,73 @@ def test_pareto_bench_smoke():
     assert "codesign_grid_at_least_1e6" not in out["required_checks"]
 
 
-def test_run_summary_consolidation():
+@pytest.fixture(scope="module")
+def fabric_whatif_out():
+    """One smoke what-if run shared by the tests below (it spans a Pareto
+    search + fabric pricing, so run it once)."""
+    import benchmarks.fabric_whatif as b
+    return b.run(csv=False, smoke=True)
+
+
+def test_fabric_whatif_benchmark_smoke(fabric_whatif_out):
+    """The search->system loop: >= 3 fabrics (metallic baseline + photonic
+    presets + co-design frontier points), per-(arch x shape) roofline terms
+    under each, and at least one bottleneck flip vs metallic involving a
+    frontier fabric."""
+    import benchmarks.fabric_whatif as b
+    out = fabric_whatif_out
+    assert out["pass"], out["checks"]
+    assert len(out["fabrics"]) >= 3
+    assert any(f["kind"] == "frontier" for f in out["fabrics"])
+    # every cell is priced under every fabric
+    assert len(out["results"]) == len(out["cells"]) * len(out["fabrics"])
+    # fabric-ranked frontier is a subset of the fabrics that came from the
+    # EDP front (no invented design points)
+    frontier_names = {f["name"] for f in out["fabrics"]
+                      if f["kind"] == "frontier"}
+    assert set(out["frontier_ranking"]) == frontier_names
+    assert (b.ARTIFACTS / "fabric_whatif.json").exists()
+
+
+def test_roofline_fabric_columns():
+    """Measured dry-run cells re-priced per fabric: the metallic row must
+    reproduce the cell's own roofline terms, the photonic rows move the
+    collective term with the link bandwidth."""
+    import benchmarks.roofline as b
+    cell = {"arch": "yi_6b", "shape": "decode_32k", "mesh": "single",
+            "status": "ok", "collective_op_counts": {"all-reduce": 65},
+            "roofline": {"flops": 3.0e9, "hbm_bytes": 5.6e8,
+                         "collective_bytes": 9.8e6, "model_flops": 3.0e9}}
+    rows = b.fabric_cells([cell])
+    assert [r["fabric"] for r in rows] == list(b.FABRIC_NAMES)
+    by = {r["fabric"]: r for r in rows}
+    assert by["trine_siph"]["collective_s"] < by["metallic_ici"]["collective_s"]
+    assert by["tree_siph"]["collective_s"] > by["metallic_ici"]["collective_s"]
+    # the 12 GB/s tree link flips this memory-bound decode cell
+    assert by["metallic_ici"]["bottleneck"] == "memory"
+    assert by["tree_siph"]["bottleneck"] == "collective"
+    assert b.fabric_markdown_table(rows).count("|") > 20
+
+
+def test_run_summary_consolidation(fabric_whatif_out):
     """benchmarks.run consolidates per-bench checks + perf gates into one
     summary (the artifacts/summary.json payload)."""
     import benchmarks.run as runner
     import benchmarks.sweep_bench as sb
     import benchmarks.pareto_bench as pb
     results = {"sweep": sb.run(csv=False, smoke=True),
-               "pareto": pb.run(csv=False, smoke=True)}
+               "pareto": pb.run(csv=False, smoke=True),
+               "fabric_whatif": fabric_whatif_out}
     summary = runner.build_summary(results)
     assert summary["pass"], summary["checks"]
     assert summary["perf"]["batched_over_scalar"]["pass"]
     assert summary["perf"]["chunked_over_monolithic_network"]["pass"]
     assert summary["perf"]["chunked_over_monolithic_codesign"]["pass"]
+    # fabric what-if gates: artifact schema + the frontier bottleneck flip
+    assert summary["checks"]["fabric_whatif/schema_keys"]
+    assert summary["checks"]["fabric_whatif/schema_result_rows"]
+    assert summary["checks"]["fabric_whatif/schema_has_frontier"]
+    assert summary["checks"]["fabric_whatif/bottleneck_flip_frontier_fabric"]
     # smoke-exempt checks must not leak into the consolidated gate
     assert "pareto/codesign_grid_at_least_1e6" not in summary["checks"]
     assert "sweep/grid_at_least_4096" not in summary["checks"]

@@ -70,6 +70,23 @@ SCRIPT = textwrap.dedent("""
     assert est_int8["cross_pod_bytes"] < est_trine["cross_pod_bytes"] / 3
     print("OK byte estimates")
 
+    # ---- byte model vs compiled HLO: the trine_int8 estimate (including
+    # the residual all-gather and the f32 scale payload) must match the
+    # wire bytes the analyzer reads off the ACTUAL compiled program ----
+    n = 4096
+    for chunk in (None, 64):
+        fn = jax.jit(lambda v, r: CC.compressed_all_reduce(
+            v, mesh, residual=r, chunk_elems=chunk))
+        txt = fn.lower(jnp.zeros((n,), jnp.float32),
+                       jnp.zeros((n,), jnp.float32)).compile().as_text()
+        stats = H.analyze_hlo(txt, 8)
+        est = CC.collective_bytes_estimate(n, 4, mesh, "trine_int8",
+                                           chunk_elems=chunk)
+        assert stats.collective_bytes_raw == est["total_bytes"], (
+            chunk, stats.collective_bytes_raw, est["total_bytes"],
+            stats.collective_op_bytes)
+    print("OK trine_int8 bytes match compiled HLO")
+
     # ---- sharding rules for every arch on the 3-axis mesh ----
     for arch in C.ARCH_IDS:
         cfg = C.get(arch)
@@ -130,6 +147,8 @@ def test_multidevice_suite(tmp_path):
                        capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
     for marker in ("OK trine_all_reduce", "OK compressed_all_reduce",
-                   "OK byte estimates", "OK sharding rules all archs",
+                   "OK byte estimates",
+                   "OK trine_int8 bytes match compiled HLO",
+                   "OK sharding rules all archs",
                    "OK sharded train step + hlo analysis"):
         assert marker in r.stdout

@@ -1,0 +1,315 @@
+"""Fabric (core.fabric) + the Layer-B paths it threads through: roofline
+back-compat (default fabric byte-identical to the old constants), preset /
+from_config / frontier constructors, the channel planner's fabric parameter,
+the subnetwork planner's round modes, and the per-chunk int8 quantizer +
+error-feedback residual fix in parallel.collectives.
+
+Multi-device collective kernels are covered in tests/test_distributed.py
+(subprocess, 8 devices); everything here runs on the single-device main
+process.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChipletSpec,
+    DEFAULT_FABRIC,
+    FABRIC_PRESETS,
+    Fabric,
+    NetworkParams,
+    choose_subnetworks,
+    codesign_pareto,
+    fabrics_from_front,
+    get_fabric,
+    metallic_ici,
+    plan_collective_channels,
+    trine_network,
+)
+from repro.core.planner import choose_subnetworks_arr
+from repro.core.search import frontier_configs
+from repro.core.workloads import CNN_WORKLOADS
+from repro.launch import hlo_analysis as H
+from repro.parallel.collectives import (
+    _dequantize_int8,
+    _quantize_int8,
+    compressed_all_reduce,
+)
+
+
+def _stats(flops=1e12, coll=5e8, n_coll=3):
+    return H.HloStats(
+        dot_flops=flops, dot_bytes=1e9, op_result_bytes=0.0,
+        collective_bytes=coll, collective_op_bytes={},
+        collective_op_counts={"all-reduce": n_coll}, max_trip=2,
+        collective_bytes_raw=coll)
+
+
+# ---------------------------------------------------------------------------
+# roofline back-compat + fabric threading
+# ---------------------------------------------------------------------------
+
+
+def test_default_fabric_byte_identical_roofline():
+    """fabric=None must price exactly like the historical constants (the
+    metallic preset has link_latency 0, so no new term appears)."""
+    stats = _stats()
+    rf = H.roofline(stats, {}, 9e11, io_bytes=1e8)
+    assert rf.compute_s == rf.flops / H.PEAK_FLOPS
+    assert rf.memory_s == rf.hbm_bytes / H.HBM_BW
+    assert rf.collective_s == rf.collective_bytes / H.ICI_BW
+    assert rf.fabric == "metallic_ici"
+    # naming the default explicitly changes nothing
+    rf2 = H.roofline(stats, {}, 9e11, io_bytes=1e8, fabric="metallic_ici")
+    assert rf2 == rf
+
+
+def test_roofline_fabric_moves_only_collective_term():
+    stats = _stats()
+    base = H.roofline(stats, {}, 9e11, io_bytes=1e8)
+    ph = H.roofline(stats, {}, 9e11, io_bytes=1e8, fabric="trine_siph")
+    assert ph.compute_s == base.compute_s
+    assert ph.memory_s == base.memory_s
+    assert ph.collective_s < base.collective_s
+    assert ph.fabric == "trine_siph"
+    fb = get_fabric("trine_siph")
+    want = stats.collective_bytes / fb.cross_pod_bw_bytes_per_s \
+        + 3 * fb.link_latency_s
+    assert ph.collective_s == pytest.approx(want, rel=1e-12)
+
+
+def test_collective_s_strictly_decreases_with_cross_pod_bw():
+    bws = [3e9, 12e9, 50e9, 96e9, 384e9]
+    times = [Fabric("f", bw, bw, link_latency_s=40e-9)
+             .collective_s(1e9, n_collectives=10.0) for bw in bws]
+    assert all(a > b for a, b in zip(times, times[1:]))
+
+
+def test_fabric_term_helpers():
+    fb = Fabric("f", 10e9, 20e9, hbm_bw_bytes_per_s=800e9,
+                peak_flops=100e12, link_latency_s=1e-7,
+                energy_per_bit_j=1e-12)
+    assert fb.compute_s(1e12) == pytest.approx(0.01)
+    assert fb.memory_s(8e9) == pytest.approx(0.01)
+    assert fb.collective_s(1e9, 5) == pytest.approx(0.1 + 5e-7)
+    assert fb.collective_energy_j(1e9) == pytest.approx(8e-3)
+
+
+# ---------------------------------------------------------------------------
+# constructors: presets, config dicts, network models, frontiers
+# ---------------------------------------------------------------------------
+
+
+def test_presets_bracket_the_metallic_baseline():
+    fabs = {n: FABRIC_PRESETS[n]() for n in FABRIC_PRESETS}
+    cross = {n: f.cross_pod_bw_bytes_per_s for n, f in fabs.items()}
+    assert cross["metallic_ici"] == 50e9
+    assert cross["trine_siph"] > cross["metallic_ici"]      # ~96 GB/s
+    assert cross["tree_siph"] < cross["metallic_ici"]       # ~12 GB/s
+    assert cross["elec_mesh"] < cross["tree_siph"]
+    for n, f in fabs.items():
+        assert f.name == n
+        assert f.intra_pod_bw_bytes_per_s >= f.cross_pod_bw_bytes_per_s
+        assert f.peak_flops == H.PEAK_FLOPS
+        assert f.energy_per_bit_j > 0
+        assert f.link_latency_s >= 0
+
+
+def test_get_fabric_resolution():
+    assert get_fabric(None) is DEFAULT_FABRIC
+    fb = metallic_ici()
+    assert get_fabric(fb) is fb
+    assert get_fabric("tree_siph").name == "tree_siph"
+    with pytest.raises(KeyError, match="unknown fabric preset"):
+        get_fabric("copper_dream")
+    with pytest.raises(TypeError):
+        get_fabric(42)
+
+
+def test_from_network_model_matches_topology_numbers():
+    net = trine_network(NetworkParams())
+    fb = Fabric.from_network_model(net, name="t")
+    assert fb.cross_pod_bw_bytes_per_s == pytest.approx(
+        net.effective_bw_bps / 8.0)
+    assert fb.intra_pod_bw_bytes_per_s >= fb.cross_pod_bw_bytes_per_s
+    assert fb.link_latency_s == net.per_transfer_s
+    assert fb.energy_per_bit_j > 0
+
+
+def test_from_config_applies_axis_overrides():
+    fb = Fabric.from_config({"topology": "trine", "n_lambda": 16.0,
+                             "mem_bw_bytes_per_s": 200e9,
+                             "mix": 1, "chiplets": ()})   # mix keys ignored
+    base = Fabric.from_config({"topology": "trine"})
+    assert fb.cross_pod_bw_bytes_per_s > base.cross_pod_bw_bytes_per_s
+    assert fb.source["topology"] == "trine"
+    assert fb.source["n_lambda"] == 16.0
+    with pytest.raises(KeyError, match="unknown config column"):
+        Fabric.from_config({"topology": "trine", "warp_factor": 9.0})
+    with pytest.raises(KeyError, match="unknown topology"):
+        Fabric.from_config({"topology": "subspace"})
+
+
+@pytest.fixture(scope="module")
+def small_front():
+    wl = CNN_WORKLOADS["ResNet18"]()
+    mixes = [[ChipletSpec(512, 32)], [ChipletSpec(256, 64)]]
+    front, spec = codesign_pareto(
+        wl, mixes, topologies=("trine",), chunk_size=8,
+        n_lambda=(4.0, 8.0), mem_bw_bytes_per_s=(50e9, 100e9))
+    return front, spec, mixes
+
+
+def test_fabrics_from_front_dedup_and_traceability(small_front):
+    front, spec, mixes = small_front
+    fabs = fabrics_from_front(front, spec, mixes=mixes)
+    assert fabs, "frontier produced no fabrics"
+    # traceable: every fabric names a flat index that is ON the EDP front
+    idx = {int(i) for i in front.indices}
+    for f in fabs:
+        topo, at = f.name.removeprefix("pareto:").split("@")
+        assert topo == "trine"
+        assert int(at) in idx
+    # deduped: same network config (mix excluded) never appears twice
+    keys = [tuple(sorted(f.source.items())) for f in fabs]
+    assert len(keys) == len(set(keys))
+    # two mixes over the same network grid collapse to one fabric each
+    assert len(fabs) <= spec.n
+    assert len(fabrics_from_front(front, spec, mixes=mixes,
+                                  max_fabrics=1)) == 1
+
+
+def test_frontier_configs_mix_aware(small_front):
+    front, spec, mixes = small_front
+    cfgs = frontier_configs(front, spec, mixes)
+    assert len(cfgs) == len(front.indices)
+    assert all("chiplets" in c and "topology" in c for c in cfgs)
+    # without mixes: plain network-grid configs
+    plain_front, plain_spec = front, spec
+    if all(int(i) < spec.n for i in front.indices):
+        plain = frontier_configs(plain_front, plain_spec)
+        assert all("chiplets" not in c for c in plain)
+
+
+# ---------------------------------------------------------------------------
+# planner: fabric-aware channel planning + K round modes
+# ---------------------------------------------------------------------------
+
+
+def test_plan_collective_channels_fabric_parity():
+    args = dict(collective_bytes=2e9, overlap_window_s=10e-3,
+                max_channels=64)
+    by_bw = plan_collective_channels(link_bw_bytes_per_s=50e9, **args)
+    by_name = plan_collective_channels(fabric="metallic_ici", **args)
+    by_obj = plan_collective_channels(fabric=metallic_ici(), **args)
+    assert by_bw == by_name == by_obj == 4
+    # a slower fabric needs more parallelism to fit the same window
+    assert plan_collective_channels(fabric="tree_siph", **args) > by_bw
+    # the fabric under evaluation wins over a stale explicit bandwidth
+    assert plan_collective_channels(link_bw_bytes_per_s=1e30,
+                                    fabric="tree_siph", **args) > by_bw
+    with pytest.raises(ValueError, match="link_bw_bytes_per_s or fabric"):
+        plan_collective_channels(2e9, 10e-3)
+
+
+def test_choose_subnetworks_round_modes():
+    p = NetworkParams()
+    # paper: raw K = 9 -> nearest power of two = 8 (the default preserves
+    # the paper's published choice)
+    assert choose_subnetworks(p) == 8
+    assert choose_subnetworks(p, round_mode="paper") == 8
+    # cover: next power of two up = 16, never below the memory bandwidth
+    assert choose_subnetworks(p, round_mode="cover") == 16
+    with pytest.raises(ValueError, match="round_mode"):
+        choose_subnetworks(p, round_mode="banker")
+
+
+def test_choose_subnetworks_cover_never_underprovisions():
+    rng = np.random.default_rng(0)
+    n_lambda = rng.integers(1, 32, 64).astype(float)
+    rate = rng.uniform(4e9, 16e9, 64)
+    mem = rng.uniform(10e9, 400e9, 64)
+    n_gw = np.full(64, 1024.0)  # large so the gateway clamp never bites
+    k_cover = choose_subnetworks_arr(n_lambda, rate, 1.0, mem, n_gw,
+                                     round_mode="cover")
+    k_paper = choose_subnetworks_arr(n_lambda, rate, 1.0, mem, n_gw,
+                                     round_mode="paper")
+    wg = n_lambda * rate
+    assert np.all(k_cover * wg >= mem * 8.0)
+    assert np.all(k_cover >= k_paper)
+    # paper mode does round down sometimes (that is the documented behavior)
+    assert np.any(k_paper * wg < mem * 8.0)
+
+
+# ---------------------------------------------------------------------------
+# collectives: per-chunk int8 scales + error-feedback residual hygiene
+# ---------------------------------------------------------------------------
+
+
+def _rel_err(x, chunk_elems):
+    q, s = _quantize_int8(x, chunk_elems)
+    deq = _dequantize_int8(q, s, x.shape[0])
+    return float(jnp.linalg.norm(deq - x) / jnp.linalg.norm(x))
+
+
+def test_per_chunk_quantize_matches_global_on_smooth_tensors():
+    x = jnp.sin(jnp.linspace(0.0, 20.0, 4096)) * 3.0
+    err_global = _rel_err(x, None)
+    err_chunked = _rel_err(x, 256)
+    assert err_global < 0.01
+    assert err_chunked <= err_global * 1.5 + 1e-6
+
+
+def test_per_chunk_quantize_wins_on_outlier_heavy_tensors():
+    """One huge spike must not flatten every other chunk's resolution — the
+    docstring's promise the old single-global-scale implementation broke."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4096,)) * 1e-3
+    x = x.at[17].set(100.0)
+
+    def small_part_err(chunk_elems):
+        q, s = _quantize_int8(x, chunk_elems)
+        deq = _dequantize_int8(q, s, x.shape[0])
+        d, r = (deq[256:], x[256:])  # everything outside the spike's chunk
+        return float(jnp.linalg.norm(d - r) / jnp.linalg.norm(r))
+
+    err_global = small_part_err(None)
+    err_chunked = small_part_err(256)
+    # one global scale of ~100/127 rounds every ~1e-3 element to zero
+    assert err_global > 0.99
+    assert err_chunked < 0.01
+    # per-chunk scales really are per-chunk (non-constant across blocks)
+    _, scales = _quantize_int8(x, 256)
+    assert scales.shape == (16,)
+    assert float(scales.max()) > 10 * float(scales.min())
+
+
+def test_quantize_chunk_handles_padding_and_clamp():
+    x = jnp.arange(7.0) - 3.0          # length not divisible by the chunk
+    q, s = _quantize_int8(x, 4)
+    assert q.shape == (2, 4) and s.shape == (2,)
+    deq = _dequantize_int8(q, s, 7)
+    assert deq.shape == (7,)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(x), atol=0.05)
+    # chunk_elems larger than the tensor falls back to one global scale
+    q1, s1 = _quantize_int8(x, 10_000)
+    assert s1.shape == (1,)
+
+
+def test_compressed_all_reduce_no_pod_drains_residual():
+    """EF hygiene on meshes without a 'pod' axis: the pending residual must
+    be folded into the payload and come back zeroed, not returned stale
+    (the leak this PR fixes — a stale residual is re-applied forever)."""
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    x = jnp.asarray(np.linspace(-1.0, 1.0, 64), jnp.float32)
+    res = jnp.full((64,), 0.25, jnp.float32)
+    out, new_res = compressed_all_reduce(x, mesh, residual=res)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x + res),
+                               rtol=1e-6)
+    assert float(jnp.abs(new_res).max()) == 0.0
+    # and with no residual passed, it is the plain all-reduce
+    out2, res2 = compressed_all_reduce(x, mesh)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(x), rtol=1e-6)
+    assert float(jnp.abs(res2).max()) == 0.0
