@@ -25,6 +25,7 @@ from benchmarks import pareto_bench        # Pareto/co-design search engine
 from benchmarks import collectives_bench   # Layer-B collective schedules
 from benchmarks import roofline            # §Roofline report
 from benchmarks import fabric_whatif       # frontier fabrics -> step time
+from benchmarks import resilience_bench    # fault model / survivability
 from benchmarks import photonic_mac_bench  # kernel microbench
 
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
@@ -131,6 +132,8 @@ def main() -> None:
     results["roofline"] = roofline.run()
     print("# fabric what-if: frontier fabrics vs end-to-end step time")
     results["fabric_whatif"] = fabric_whatif.run()
+    print("# resilience: fault degradation curves + Monte-Carlo availability")
+    results["resilience"] = resilience_bench.run()
 
     summary = write_summary(results)
     print("# consolidated summary -> artifacts/summary.json")

@@ -18,11 +18,12 @@ that to full arrays — interface kept identical.
 from __future__ import annotations
 
 import hashlib
+import io
 import json
 import os
 import shutil
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
@@ -71,14 +72,19 @@ def save(directory: str | Path, step: int, tree: Any, keep: int = 3) -> Path:
     return final
 
 
-def latest_step(directory: str | Path) -> Optional[int]:
+def retained_steps(directory: str | Path) -> list:
+    """Ascending step numbers of every retained (non-.tmp) checkpoint."""
     directory = Path(directory)
     if not directory.exists():
-        return None
-    steps = [int(d.name.split("_")[1]) for d in directory.iterdir()
-             if d.is_dir() and d.name.startswith("step_")
-             and not d.name.endswith(".tmp")]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(d.name.split("_")[1]) for d in directory.iterdir()
+                  if d.is_dir() and d.name.startswith("step_")
+                  and not d.name.endswith(".tmp"))
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    steps = retained_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str | Path, step: int, like: Any,
@@ -97,10 +103,32 @@ def restore(directory: str | Path, step: int, like: Any,
     out_leaves = []
     for (name, _), sh in zip(_leaf_paths(like), shard_leaves):
         meta = manifest["leaves"][name]
+        # one read per leaf: hash and decode the same buffer
         raw = (ck / meta["file"]).read_bytes()
         if hashlib.sha1(raw).hexdigest() != meta["sha1"]:
             raise IOError(f"checkpoint corruption in {name}")
-        arr = np.load(ck / meta["file"])
+        arr = np.load(io.BytesIO(raw), allow_pickle=False)
         out_leaves.append(jax.device_put(arr, sh) if sh is not None
                           else jax.numpy.asarray(arr))
     return jax.tree.unflatten(jax.tree.structure(like), out_leaves)
+
+
+def restore_latest_valid(directory: str | Path, like: Any,
+                         shardings: Any = None
+                         ) -> Optional[Tuple[Any, int]]:
+    """Restore the newest retained checkpoint that verifies, walking back
+    through older retained steps when the latest is corrupt or truncated
+    (bad SHA1, missing manifest, undecodable leaf).  Bad checkpoint
+    directories are deleted so retries and retention don't keep tripping on
+    them.  Returns (state, step), or None when nothing restorable exists."""
+    directory = Path(directory)
+    for step in reversed(retained_steps(directory)):
+        try:
+            return restore(directory, step, like, shardings), step
+        except (OSError, EOFError, ValueError) as e:
+            # OSError covers the SHA1 IOError + missing files;
+            # ValueError/EOFError cover truncated/undecodable npy payloads
+            bad = directory / f"step_{step:08d}"
+            print(f"[checkpoint] dropping corrupt {bad.name}: {e}")
+            shutil.rmtree(bad, ignore_errors=True)
+    return None

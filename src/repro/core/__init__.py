@@ -69,5 +69,17 @@ from repro.core.search import (
     pareto_search,
     refine_continuous,
 )
+from repro.core.fabric import degrade, overlapped_step_s
+from repro.core.faults import (
+    FaultModel,
+    FaultScenario,
+    FabricUnusableError,
+    HEALTHY,
+    AvailabilityReducer,
+    availability_search,
+    degraded_network_columns,
+    evaluate_degraded,
+    faulted_columns_fn,
+)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -68,7 +68,7 @@ if TYPE_CHECKING:  # pragma: no cover
 
 __all__ = [
     "Fabric", "DEFAULT_FABRIC", "FABRIC_PRESETS", "get_fabric",
-    "metallic_ici", "fabrics_from_front",
+    "metallic_ici", "fabrics_from_front", "degrade", "overlapped_step_s",
     "DEFAULT_PEAK_FLOPS", "DEFAULT_HBM_BW", "METALLIC_ICI_BW",
 ]
 
@@ -206,17 +206,20 @@ def metallic_ici() -> Fabric:
 DEFAULT_FABRIC = metallic_ici()
 
 
-def _preset(factory, name: str) -> Fabric:
-    return Fabric.from_network_model(factory(NetworkParams()), name=name)
+def _preset(factory, name: str, topology: str) -> Fabric:
+    # the topology key in `source` lets `degrade` rebuild the design point
+    # exactly (the same columnar path `from_config` takes)
+    return Fabric.from_network_model(factory(NetworkParams()), name=name,
+                                     source={"topology": topology})
 
 
 FABRIC_PRESETS = {
     "metallic_ici": metallic_ici,
-    "trine_siph": lambda: _preset(trine_network, "trine_siph"),
-    "tree_siph": lambda: _preset(tree_network, "tree_siph"),
-    "sprint_siph": lambda: _preset(sprint_bus, "sprint_siph"),
-    "spacx_siph": lambda: _preset(spacx_bus, "spacx_siph"),
-    "elec_mesh": lambda: _preset(electrical_mesh, "elec_mesh"),
+    "trine_siph": lambda: _preset(trine_network, "trine_siph", "trine"),
+    "tree_siph": lambda: _preset(tree_network, "tree_siph", "tree"),
+    "sprint_siph": lambda: _preset(sprint_bus, "sprint_siph", "sprint"),
+    "spacx_siph": lambda: _preset(spacx_bus, "spacx_siph", "spacx"),
+    "elec_mesh": lambda: _preset(electrical_mesh, "elec_mesh", "elec"),
 }
 
 
@@ -270,3 +273,83 @@ def fabrics_from_front(
         if max_fabrics is not None and len(out) >= max_fabrics:
             break
     return out
+
+
+# --------------------------------------------------------------------------
+# Fault degradation (core.faults threaded into the Layer-B link model)
+# --------------------------------------------------------------------------
+
+
+def degrade(fabric, scenario) -> Fabric:
+    """The Layer-B view of a fault scenario: re-derive a fabric's link
+    numbers under `scenario` (a scalar `core.faults.FaultScenario`).
+
+    Fabrics whose `source` names a topology (presets, `from_config`,
+    frontier fabrics) take the exact columnar path: rebuild the design
+    point's columns, degrade them through `core.faults`, and reduce the
+    degraded fields to cross/intra-pod bandwidth, per-hop latency, and
+    energy/bit — so laser aging and thermal drift show up as a higher
+    energy_per_bit_j, and dead banks/wavelengths as lower bandwidth.
+    Sourceless fabrics (the metallic baseline) only expose gateway ports to
+    failure: bandwidth scales by the surviving-port fraction.
+
+    Degradation composes from the *healthy* source design — pass cumulative
+    scenarios rather than chaining degrade() calls.
+    """
+    from repro.core import faults as F  # runtime import: faults layers above
+    from repro.core.sweep import evaluate_columns, grid_spec
+
+    fb = get_fabric(fabric)
+    if scenario.batch_shape():
+        raise ValueError("degrade takes one scalar scenario; fold batches "
+                         "through core.faults.availability_search instead")
+    name = f"{fb.name}|{scenario.name}"
+    topology = fb.source.get("topology")
+    if topology is None:
+        surv = float(F.port_survival(scenario))
+        return dataclasses.replace(
+            fb, name=name,
+            cross_pod_bw_bytes_per_s=fb.cross_pod_bw_bytes_per_s * surv,
+            intra_pod_bw_bytes_per_s=fb.intra_pod_bw_bytes_per_s * surv,
+            source=dict(fb.source, degraded=1.0))
+
+    spec = grid_spec((str(topology),))
+    cols = dict(spec.base)
+    for k, v in fb.source.items():
+        if k in cols:
+            cols[k] = float(v)
+    cols = {k: np.atleast_1d(np.float64(v)) for k, v in cols.items()}
+    nets, dcols = F.degraded_network_columns(
+        cols, np.zeros(1, np.int64), (str(topology),), scenario)
+    eff = float(np.ravel(nets["effective_bw_bps"])[0])
+    agg = float(np.ravel(nets["aggregate_bw_bps"])[0])
+    cross = eff / 8.0
+    if eff > 0:
+        rep = evaluate_columns(nets, dcols, _PROBE.total_bits,
+                               _PROBE.n_transfers)
+        epb = float(np.ravel(rep["energy_per_bit_j"])[0])
+    else:
+        epb = float("inf")  # no surviving lanes: nothing can cross
+    return dataclasses.replace(
+        fb, name=name,
+        cross_pod_bw_bytes_per_s=cross,
+        intra_pod_bw_bytes_per_s=max(agg / 8.0, cross),
+        link_latency_s=float(np.ravel(nets["per_transfer_s"])[0]),
+        energy_per_bit_j=epb,
+        source=dict(fb.source, degraded=1.0))
+
+
+def overlapped_step_s(compute_s: float, wire_bytes: float, fabric,
+                      channels: int) -> float:
+    """Modeled train-step time when a `wire_bytes` collective overlaps a
+    `compute_s` window through `channels` parallel chunks.  The first chunk
+    has nothing to hide behind, so only (1 - 1/channels) of the compute
+    window is usable cover — more channels on a degraded (slower) fabric
+    recover throughput, which is what replanning buys."""
+    fb = get_fabric(fabric)
+    if fb.cross_pod_bw_bytes_per_s <= 0:
+        return float("inf")
+    channels = max(1, int(channels))
+    comm = fb.collective_s(wire_bytes, n_collectives=channels)
+    cover = compute_s * (1.0 - 1.0 / channels)
+    return compute_s + max(0.0, comm - cover)

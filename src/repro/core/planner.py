@@ -144,6 +144,12 @@ def plan_collective_channels(
             link_bw_bytes_per_s = get_fabric(fabric).cross_pod_bw_bytes_per_s
     if link_bw_bytes_per_s is None:
         raise ValueError("pass link_bw_bytes_per_s or fabric")
+    if link_bw_bytes_per_s <= 0:
+        # a fully-degraded fabric: no channel count can carry the collective
+        from repro.core.faults import FabricUnusableError  # runtime: no cycle
+        raise FabricUnusableError(
+            "collective cannot be scheduled: link bandwidth is zero "
+            "(fabric degraded beyond use)")
     if collective_bytes <= 0:
         return 1
     need = collective_bytes / max(overlap_window_s * link_bw_bytes_per_s, 1e-30)

@@ -367,16 +367,22 @@ def pareto_search(
     chunk_size: int = 65536,
     objectives: Sequence[str] = OBJECTIVES,
     shard: bool = False,
+    columns_fn=None,
     **axes: Sequence[float],
 ):
     """Streaming per-workload Pareto front over a network configuration grid:
     `sweep_chunked` + `ParetoReducer` in one call.  Returns a ParetoFront
     (or a list per workload traffic); recover configurations with
-    `front.configs(grid_spec(topologies, **axes))`."""
+    `front.configs(grid_spec(topologies, **axes))`.
+
+    `columns_fn` passes through to `sweep_chunked` — with
+    `core.faults.faulted_columns_fn(scenario)` the result is the *survivable*
+    frontier: the Pareto front of the grid as it performs under the fault
+    scenario rather than healthy."""
     return sweep_chunked(
         traffic, ParetoReducer(objectives), topologies=topologies,
         devices=devices, active_fraction=active_fraction,
-        chunk_size=chunk_size, shard=shard, **axes)
+        chunk_size=chunk_size, shard=shard, columns_fn=columns_fn, **axes)
 
 
 # --------------------------------------------------------------------------

@@ -467,6 +467,7 @@ def sweep_chunked(
     active_fraction: float = 1.0,
     chunk_size: int = 65536,
     shard: bool = False,
+    columns_fn=None,
     **axes: Sequence[float],
 ):
     """Stream a configuration grid through the jitted kernel in fixed-size
@@ -478,6 +479,13 @@ def sweep_chunked(
     `traffic` may be one Traffic or a sequence (per-workload metric rows).
     With ``shard=True`` and multiple visible devices, chunk columns are laid
     out across devices along the config axis.
+
+    `columns_fn(cols, topo_id, topologies) -> (nets, dev_cols)` replaces the
+    default network-column builder per chunk — the hook `core.faults` uses
+    to evaluate every chunk under a (possibly batched) fault scenario, whose
+    returned columns may carry a leading scenario axis ((S, chunk)).  The
+    config-axis sharding path assumes 1-D columns; don't combine it with a
+    batched `columns_fn`.
     """
     spec = grid_spec(topologies, devices=devices, **axes)
     n = spec.n
@@ -503,9 +511,13 @@ def sweep_chunked(
             cols = {k: np.concatenate([v, np.repeat(v[-1:], pad)])
                     for k, v in cols.items()}
             topo_id = np.concatenate([topo_id, np.repeat(topo_id[-1:], pad)])
-        nets = _network_columns_arrays(cols, topo_id, spec.topologies)
+        if columns_fn is None:
+            nets = _network_columns_arrays(cols, topo_id, spec.topologies)
+            dev_cols = cols
+        else:
+            nets, dev_cols = columns_fn(cols, topo_id, spec.topologies)
         nets_j = {k: _as_f64(nets[k]) for k in MODEL_FIELDS}
-        dev_j = {k: _as_f64(cols[k]) for k in _EVAL_DEVICE_FIELDS}
+        dev_j = {k: _as_f64(dev_cols[k]) for k in _EVAL_DEVICE_FIELDS}
         if sharding is not None:
             nets_j = {k: jax.device_put(v, sharding)
                       for k, v in nets_j.items()}
@@ -515,7 +527,7 @@ def sweep_chunked(
         shape = np.broadcast_shapes(*(v.shape for v in out.values()))
         valid = stop - start
         out = {k: np.broadcast_to(v, shape)[..., :valid] for k, v in out.items()}
-        nets = {k: v[:valid] for k, v in nets.items()}
+        nets = {k: np.asarray(v)[..., :valid] for k, v in nets.items()}
         carry = reducer.step(carry, SweepChunk(
             spec=spec, start=start, stop=stop, topo_id=topo_id[:valid],
             nets=nets, metrics=out))

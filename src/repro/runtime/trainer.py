@@ -25,6 +25,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import store
+from repro.core.fabric import degrade, get_fabric, overlapped_step_s
+from repro.core.faults import FabricUnusableError, FaultScenario
+from repro.core.planner import plan_collective_channels
 from repro.data.pipeline import DataConfig, DeadlineMonitor, Prefetcher, SyntheticLM
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -126,12 +129,14 @@ class TrainerConfig:
     log_every: int = 10
     straggler_deadline_s: float = 1e9
     seed: int = 0
+    overlap_window_s: float = 50e-3   # compute window the gradient collective
+                                      # hides under (channel planning)
 
 
 class Trainer:
     def __init__(self, cfg: ModelConfig, opt: adamw.OptConfig,
                  data: DataConfig, tcfg: TrainerConfig,
-                 mesh=None, resume: bool = True, source=None):
+                 mesh=None, resume: bool = True, source=None, fabric=None):
         self.cfg, self.opt, self.data_cfg, self.tcfg = cfg, opt, data, tcfg
         self.mesh = mesh
         self.source = source if source is not None else SyntheticLM(cfg, data)
@@ -149,19 +154,59 @@ class Trainer:
 
         self.start_step = 0
         if resume:
-            last = store.latest_step(tcfg.ckpt_dir)
-            if last is not None:
-                self.state = store.restore(tcfg.ckpt_dir, last, self.state,
-                                           self.state_sh)
-                self.start_step = int(last)
+            # corrupt/truncated latest checkpoints (bad SHA1, missing
+            # manifest) are dropped and the previous retained step restored
+            restored = store.restore_latest_valid(tcfg.ckpt_dir, self.state,
+                                                  self.state_sh)
+            if restored is not None:
+                self.state, self.start_step = restored[0], int(restored[1])
+
+        # modeled photonic fabric under the data-parallel gradient collective:
+        # channel plan + exposed network time per step, replanned on faults
+        self.fabric = None if fabric is None else get_fabric(fabric)
+        self.collective_channels = None
+        self.net_s = 0.0
+        if self.fabric is not None:
+            self._grad_bytes = 4.0 * sum(
+                int(np.prod(np.shape(l)))
+                for l in jax.tree.leaves(self.state.params))
+            self._replan()
 
         self.monitor = DeadlineMonitor(tcfg.straggler_deadline_s)
         self.history: list = []
 
+    # ---- fault-epoch hook -------------------------------------------------
+    def _replan(self) -> None:
+        """(Re)plan the gradient-collective channels against the current
+        fabric and refresh the modeled exposed network time per step.
+        Raises FabricUnusableError when the fabric cannot carry the
+        collective at all (the hard-fail path)."""
+        if self.fabric.cross_pod_bw_bytes_per_s <= 0:
+            raise FabricUnusableError(
+                f"fabric {self.fabric.name!r} has no surviving bandwidth; "
+                f"the gradient collective cannot be scheduled")
+        w = self.tcfg.overlap_window_s
+        self.collective_channels = plan_collective_channels(
+            self._grad_bytes, w, fabric=self.fabric, max_channels=64)
+        self.net_s = overlapped_step_s(
+            w, self._grad_bytes, self.fabric, self.collective_channels) - w
+
+    def inject_fault(self, scenario: FaultScenario) -> None:
+        """Degrade the fabric under `scenario` and replan the collective —
+        training continues at the (modeled) reduced throughput, or hard-fails
+        with FabricUnusableError when nothing survives."""
+        if self.fabric is None:
+            raise ValueError("trainer has no fabric to degrade")
+        self.fabric = degrade(self.fabric, scenario)
+        self._replan()
+
     def run(self, steps: int, fail_at: Optional[int] = None,
-            quiet: bool = False) -> Dict[str, Any]:
+            quiet: bool = False, fault_at: Optional[int] = None,
+            fault_scenario: Optional[FaultScenario] = None) -> Dict[str, Any]:
         t0 = time.perf_counter()
         for step in range(self.start_step, steps):
+            if fault_at is not None and step + 1 == fault_at:
+                self.inject_fault(fault_scenario)
             fetch_t0 = time.perf_counter()
             batch = self.source.batch_at(step)
             delivery = time.perf_counter() - fetch_t0
@@ -177,27 +222,43 @@ class Trainer:
             if not quiet and (step + 1) % self.tcfg.log_every == 0:
                 print(f"step {step+1}: loss={float(metrics['loss']):.4f} "
                       f"gnorm={float(metrics['grad_norm']):.3f}")
-            self.history.append(
-                {k: float(v) for k, v in metrics.items()})
-        return {
+            row = {k: float(v) for k, v in metrics.items()}
+            row["step"] = step + 1
+            if self.fabric is not None:
+                row["net_s"] = self.net_s
+            self.history.append(row)
+        result = {
             "final_step": steps,
             "wall_s": time.perf_counter() - t0,
             "last_loss": self.history[-1]["loss"] if self.history else None,
             "straggler": dataclasses.asdict(self.monitor.stats),
         }
+        if self.fabric is not None:
+            result["fabric"] = self.fabric.name
+            result["collective_channels"] = self.collective_channels
+            result["net_s"] = self.net_s
+        return result
 
 
-def run_with_restarts(make_trainer, total_steps: int, fail_at=()):
+def run_with_restarts(make_trainer, total_steps: int, fail_at=(),
+                      **run_kwargs):
     """Supervisor loop: on FailureInjected (or a real crash in production),
     rebuild the trainer — which restores the latest checkpoint — and continue.
-    Returns the last trainer."""
+    Returns the last trainer, with `history` merged across segments so
+    post-restart reports cover the full run (steps replayed after a restore
+    keep only their re-executed rows — each step appears exactly once)."""
     pending = list(fail_at)
+    prior: list = []
     while True:
         tr = make_trainer()
+        # drop first-execution rows of steps the restored trainer will replay
+        prior = [h for h in prior if h.get("step", 0) <= tr.start_step]
         try:
             tr.run(total_steps, fail_at=pending[0] if pending else None,
-                   quiet=True)
+                   quiet=True, **run_kwargs)
+            tr.history = prior + tr.history
             return tr
         except FailureInjected:
+            prior = prior + tr.history
             pending.pop(0)
             continue

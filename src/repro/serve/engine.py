@@ -26,6 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fabric import degrade, get_fabric
+from repro.core.faults import FabricUnusableError, FaultScenario
+from repro.core.planner import plan_collective_channels
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -53,7 +56,8 @@ def _slot_update(cache_tree, slot_tree, slot: int, n_slots: int):
 
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, n_slots: int, max_len: int,
-                 eos_id: Optional[int] = None, prompt_bucket: int = 16):
+                 eos_id: Optional[int] = None, prompt_bucket: int = 16,
+                 fabric=None, decode_window_s: float = 2e-3):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_id = eos_id
@@ -70,6 +74,44 @@ class ContinuousBatcher:
 
         self._decode = jax.jit(self._decode_impl)
         self._prefills: Dict[int, callable] = {}     # per padded length
+
+        # modeled photonic fabric under the per-iteration tensor-parallel
+        # collectives (2 all-reduces of bf16 activations per layer, the
+        # whole decode batch); replanned on injected faults
+        self.fabric = None if fabric is None else get_fabric(fabric)
+        self.decode_window_s = decode_window_s
+        self.collective_channels = None
+        self.net_stats = {"decode_iters": 0, "modeled_net_s": 0.0,
+                          "fault_iter": None, "replans": 0}
+        if self.fabric is not None:
+            self._replan()
+
+    # ---- fault-epoch hook --------------------------------------------
+    def _iter_wire_bytes(self) -> float:
+        return float(self.cfg.n_layers * 2 * self.n_slots
+                     * self.cfg.d_model * 2)
+
+    def _replan(self) -> None:
+        if self.fabric.cross_pod_bw_bytes_per_s <= 0:
+            raise FabricUnusableError(
+                f"fabric {self.fabric.name!r} has no surviving bandwidth; "
+                f"decode collectives cannot be scheduled")
+        self.collective_channels = plan_collective_channels(
+            self._iter_wire_bytes(), self.decode_window_s,
+            fabric=self.fabric, min_chunk_bytes=1 << 10)
+        self._net_s_per_iter = self.fabric.collective_s(
+            self._iter_wire_bytes(),
+            n_collectives=self.cfg.n_layers * 2)
+        self.net_stats["replans"] += 1
+
+    def inject_fault(self, scenario: FaultScenario) -> None:
+        """Degrade the serving fabric and replan — decode continues at the
+        (modeled) reduced throughput, or hard-fails when nothing survives."""
+        if self.fabric is None:
+            raise ValueError("batcher has no fabric to degrade")
+        self.fabric = degrade(self.fabric, scenario)
+        self._replan()
+        self.net_stats["fault_iter"] = self.net_stats["decode_iters"]
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int) -> Request:
@@ -119,10 +161,18 @@ class ContinuousBatcher:
         self.last_tok[slot] = req.prompt[-1]
 
     # ------------------------------------------------------------------
-    def run(self) -> List[Request]:
-        """Drain the queue; returns all finished requests."""
+    def run(self, fault_at_iter: Optional[int] = None,
+            fault_scenario: Optional[FaultScenario] = None) -> List[Request]:
+        """Drain the queue; returns all finished requests.  With
+        `fault_at_iter`, `fault_scenario` is injected before that decode
+        iteration (0-based) — the modeled network time per iteration rises
+        and `net_stats` records the fault point."""
         finished: List[Request] = []
         while self.queue or any(r is not None for r in self.slot_req):
+            if (fault_at_iter is not None
+                    and self.net_stats["decode_iters"] == fault_at_iter
+                    and self.net_stats["fault_iter"] is None):
+                self.inject_fault(fault_scenario)
             # admit into free slots
             for s in range(self.n_slots):
                 if self.slot_req[s] is None and self.queue:
@@ -132,6 +182,9 @@ class ContinuousBatcher:
             pos = jnp.asarray(self.pos)
             logits, self.cache = self._decode(self.params, self.cache,
                                               toks, pos)
+            self.net_stats["decode_iters"] += 1
+            if self.fabric is not None:
+                self.net_stats["modeled_net_s"] += self._net_s_per_iter
             nxt = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
             for s in range(self.n_slots):
                 req = self.slot_req[s]

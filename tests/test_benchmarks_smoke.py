@@ -163,6 +163,25 @@ def test_roofline_benchmark_smoke():
     assert b.photonic_markdown_table(out["photonic"]).count("|") > 20
 
 
+def test_resilience_benchmark_smoke():
+    """Survivability bench: monotone degradation curves, replanning never
+    loses to the naive schedule, TRINE's bank redundancy beats the
+    single-bank tree, and the Monte-Carlo availability column streams over
+    a >= 1e5-point grid even in smoke (chunking bounds memory, not grid
+    size — so there is no smoke exemption: every check is required)."""
+    import benchmarks.resilience_bench as b
+    out = b.run(csv=False, smoke=True)
+    assert out["checks"]["monotone_degradation"]
+    assert out["checks"]["replan_recovers"], out["recovery"]
+    assert out["checks"]["trine_redundancy_beats_tree"], out["availability"]
+    assert out["checks"]["availability_grid_at_least_1e5"]
+    assert out["yield_grid"]["n_points"] >= 100_000
+    assert out["checks"]["expected_edp_ge_healthy"]
+    assert out["required_checks"] == list(out["checks"])
+    assert out["pass"], out["checks"]
+    assert (b.ARTIFACTS / "resilience.json").exists()
+
+
 def test_collectives_benchmark_smoke():
     import benchmarks.collectives_bench as b
     out = b.run(csv=False)

@@ -1,7 +1,9 @@
-"""Elastic scaling: a checkpoint written under one mesh restores onto a
-DIFFERENT mesh (fewer/more devices, different axis split) and training
-continues.  This is the lose-a-pod -> re-mesh -> restore -> continue path
-(DESIGN.md §7); runs with 8 fake CPU devices in a subprocess."""
+"""Elastic scaling + restart robustness: a checkpoint written under one mesh
+restores onto a DIFFERENT mesh (fewer/more devices, different axis split) and
+training continues — the lose-a-pod -> re-mesh -> restore -> continue path
+(DESIGN.md §7), run with 8 fake CPU devices in a subprocess — plus in-process
+supervisor-loop tests: multi-failure restart schedules and fallback past a
+corrupted latest checkpoint."""
 
 import os
 import subprocess
@@ -9,7 +11,15 @@ import sys
 import textwrap
 from pathlib import Path
 
+import jax
+import numpy as np
 import pytest
+
+from repro import configs as C
+from repro.checkpoint import store
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import OptConfig
+from repro.runtime.trainer import Trainer, TrainerConfig, run_with_restarts
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -90,3 +100,80 @@ def test_elastic_remesh_restore():
                        capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
     assert "OK elastic re-mesh restore + continue" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# supervisor-loop restart robustness (in-process, single device)
+# ---------------------------------------------------------------------------
+
+CFG = C.get_reduced("yi_6b")
+OPT = OptConfig(lr=1e-3, warmup_steps=2, total_steps=16)
+DATA = DataConfig(global_batch=2, seq_len=64)
+
+
+def _trainer(tmp, resume=True):
+    return Trainer(CFG, OPT, DATA,
+                   TrainerConfig(ckpt_dir=str(tmp), ckpt_every=2,
+                                 log_every=1000),
+                   resume=resume)
+
+
+def _leaves(state):
+    return [np.asarray(x) for x in jax.tree.leaves(state)]
+
+
+def test_run_with_restarts_multi_failure(tmp_path):
+    """Two injected failures in one supervised run: the final state is
+    bitwise identical to an uninterrupted run and the merged history covers
+    every step exactly once, in order."""
+    straight = _trainer(tmp_path / "a", resume=False)
+    straight.run(8, quiet=True)
+
+    tr = run_with_restarts(lambda: _trainer(tmp_path / "b"), total_steps=8,
+                           fail_at=(3, 5))
+    for a, b in zip(_leaves(straight.state), _leaves(tr.state)):
+        np.testing.assert_array_equal(a, b)
+    assert [h["step"] for h in tr.history] == list(range(1, 9))
+    np.testing.assert_allclose(
+        [h["loss"] for h in tr.history],
+        [h["loss"] for h in straight.history], rtol=1e-6)
+
+
+@pytest.mark.parametrize("corruption", ["leaf_bytes", "leaf_truncated",
+                                        "manifest_missing"])
+def test_corrupt_latest_checkpoint_falls_back(tmp_path, corruption):
+    """Resume survives a corrupt/truncated latest checkpoint: the trainer
+    falls back to the previous retained step and deletes the bad
+    directory so retention stops tripping on it."""
+    tr = _trainer(tmp_path, resume=False)
+    tr.run(8, quiet=True)
+    assert store.retained_steps(tmp_path) == [4, 6, 8]
+
+    latest = tmp_path / "step_00000008"
+    if corruption == "manifest_missing":
+        (latest / "manifest.json").unlink()
+    else:
+        victim = sorted(latest.glob("leaf_*.npy"))[0]
+        raw = victim.read_bytes()
+        victim.write_bytes(b"corrupted!" + raw[10:]
+                           if corruption == "leaf_bytes" else raw[:32])
+
+    resumed = _trainer(tmp_path, resume=True)
+    assert resumed.start_step == 6
+    assert not latest.exists()
+    assert store.retained_steps(tmp_path) == [4, 6]
+    for a, b in zip(_leaves(store.restore(tmp_path, 6, resumed.state)),
+                    _leaves(resumed.state)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_all_checkpoints_corrupt_starts_fresh(tmp_path):
+    """When every retained checkpoint fails verification the trainer starts
+    from step 0 instead of crashing."""
+    tr = _trainer(tmp_path, resume=False)
+    tr.run(4, quiet=True)
+    for d in tmp_path.glob("step_*"):
+        (d / "manifest.json").unlink()
+    resumed = _trainer(tmp_path, resume=True)
+    assert resumed.start_step == 0
+    assert store.retained_steps(tmp_path) == []

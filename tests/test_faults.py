@@ -1,0 +1,314 @@
+"""Photonic fault-injection layer: columnar degradation semantics, fabric
+degrade/replan, Monte-Carlo availability, and the trainer/serving
+fault-epoch hooks (inject at step N -> replan -> continue, or hard-fail
+when nothing survives)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.core import (
+    FabricUnusableError,
+    FaultModel,
+    FaultScenario,
+    HEALTHY,
+    Traffic,
+    availability_search,
+    degrade,
+    evaluate_degraded,
+    faulted_columns_fn,
+    get_fabric,
+    overlapped_step_s,
+    plan_collective_channels,
+)
+from repro.core.sweep import ChunkReducer, sweep, sweep_chunked
+from repro.data.pipeline import DataConfig
+from repro.models import model as M
+from repro.optim.adamw import OptConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.serve.engine import ContinuousBatcher
+
+TRAFFIC = Traffic(bytes_read=1 << 30, bytes_written=1 << 28, n_transfers=64)
+ALL_TOPOLOGIES = ("trine", "tree", "spacx", "sprint", "elec")
+
+MODEL = FaultModel(p_lambda=0.15, p_bank=0.12, p_gateway=0.05, wpe_loss=0.2,
+                   drift_sigma_db=0.5, tuning_sigma=0.3)
+
+
+# ---------------------------------------------------------------------------
+# columnar degradation semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", ALL_TOPOLOGIES)
+def test_healthy_scenario_is_identity(topo):
+    got = evaluate_degraded(TRAFFIC, HEALTHY, topo)
+    ref = sweep(TRAFFIC, topologies=(topo,)).metrics
+    for key in ("latency_s", "energy_j", "power_w", "energy_per_bit_j"):
+        np.testing.assert_allclose(got[key], ref[key], rtol=1e-6)
+
+
+@pytest.mark.parametrize("topo", ALL_TOPOLOGIES)
+def test_metrics_monotone_in_severity(topo):
+    """Latency and EDP never improve as every fault rate scales up (raw
+    power is excluded by design: dead networks stop burning dynamic power)."""
+    prev = None
+    for s in (0.0, 0.25, 0.5, 1.0, 2.0, 4.0):
+        m = evaluate_degraded(TRAFFIC, MODEL.scale(s).expected(), topo)
+        lat, edp = float(m["latency_s"][0]), float(
+            m["latency_s"][0] * m["energy_j"][0])
+        if prev is not None:
+            assert lat >= prev[0] * (1 - 1e-9), (topo, s)
+            assert edp >= prev[1] * (1 - 1e-9), (topo, s)
+        prev = (lat, edp)
+
+
+def test_single_bank_design_dies_multi_bank_degrades():
+    """The redundancy argument, quantitatively: one dead laser bank kills
+    Tree (1 bank) outright but costs 8-bank TRINE only a 1/8 slice."""
+    one_bank = FaultScenario(failed_laser_banks=1.0)
+    assert np.isinf(evaluate_degraded(TRAFFIC, one_bank, "tree")["latency_s"][0])
+    h = evaluate_degraded(TRAFFIC, HEALTHY, "trine")
+    d = evaluate_degraded(TRAFFIC, one_bank, "trine")
+    assert np.isfinite(d["latency_s"][0])
+    # serialization term scales by 8/7; the fixed per-transfer term dilutes it
+    assert 1.0 < d["latency_s"][0] / h["latency_s"][0] <= 8.0 / 7.0 + 1e-9
+
+
+def test_trine_gateway_blast_radius_is_a_subnetwork():
+    """A dead gateway severs TRINE's SWMR subnetwork behind it — the same
+    bandwidth hit as a dead bank — while bus designs only lose 1/G ports."""
+    one_gw = FaultScenario(failed_gateways=1.0)
+    one_bank = FaultScenario(failed_laser_banks=1.0)
+    trine_gw = evaluate_degraded(TRAFFIC, one_gw, "trine")
+    trine_bank = evaluate_degraded(TRAFFIC, one_bank, "trine")
+    np.testing.assert_allclose(trine_gw["latency_s"], trine_bank["latency_s"],
+                               rtol=1e-9)
+    h = float(evaluate_degraded(TRAFFIC, HEALTHY, "spacx")["latency_s"][0])
+    d = float(evaluate_degraded(TRAFFIC, one_gw, "spacx")["latency_s"][0])
+    assert h < d <= h * 32.0 / 31.0 * (1 + 1e-9)  # 1-of-32-ports hit only
+
+
+def test_dead_hardware_does_not_lower_loss_or_power_terms():
+    """Dead rings stay on the waveguide: loss-driven laser power and
+    trimming never DROP under wavelength faults."""
+    h = evaluate_degraded(TRAFFIC, HEALTHY, "sprint")
+    d = evaluate_degraded(TRAFFIC, FaultScenario(dead_lambda_frac=0.5),
+                          "sprint")
+    assert d["trimming_power_w"][0] >= h["trimming_power_w"][0] * (1 - 1e-9)
+    assert d["latency_s"][0] > h["latency_s"][0]
+
+
+def test_batched_scenarios_broadcast():
+    sc = MODEL.sample(16, rng=0)
+    m = evaluate_degraded(TRAFFIC, sc, "trine")
+    assert m["latency_s"].shape == (16, 1)
+    assert np.all(np.isfinite(m["energy_per_bit_j"])
+                  | np.isinf(m["energy_per_bit_j"]))
+
+
+def test_expected_scenario_scales_with_model():
+    e = MODEL.scale(0.0).expected()
+    assert e.is_healthy() or (e.failed_laser_banks == 0
+                              and e.dead_lambda_frac == 0)
+    e2 = MODEL.scale(2.0).expected()
+    assert e2.failed_laser_banks > MODEL.expected().failed_laser_banks
+
+
+# ---------------------------------------------------------------------------
+# sweep/search composition
+# ---------------------------------------------------------------------------
+
+
+class _Collect(ChunkReducer):
+    def init(self, spec):
+        return []
+
+    def step(self, carry, chunk):
+        carry.append({k: np.array(v) for k, v in chunk.metrics.items()})
+        return carry
+
+    def finish(self, carry, spec):
+        return {k: np.concatenate([c[k] for c in carry], axis=-1)
+                for k in carry[0]}
+
+
+def test_faulted_columns_fn_healthy_matches_plain_sweep():
+    axes = dict(n_lambda=(4.0, 8.0), mem_bw_bytes_per_s=(50e9, 100e9))
+    plain = sweep_chunked(TRAFFIC, _Collect(), topologies=ALL_TOPOLOGIES,
+                          chunk_size=7, **axes)
+    faulted = sweep_chunked(TRAFFIC, _Collect(), topologies=ALL_TOPOLOGIES,
+                            chunk_size=7,
+                            columns_fn=faulted_columns_fn(HEALTHY), **axes)
+    for k in plain:
+        np.testing.assert_allclose(faulted[k], plain[k], rtol=1e-7)
+
+
+def test_availability_search_budget_extremes():
+    scenarios = MODEL.sample(8, rng=3)
+    kw = dict(topologies=("trine", "tree"), chunk_size=16,
+              n_lambda=(4.0, 8.0), mem_bw_bytes_per_s=(50e9, 100e9))
+    lenient = availability_search(TRAFFIC, scenarios, epb_budget_j=1e3, **kw)
+    strict = availability_search(TRAFFIC, scenarios, epb_budget_j=0.0, **kw)
+    assert lenient["n"] == 8 and lenient["n_scenarios"] == 8
+    # huge budget: availability == P(design survives at all, finite EPB);
+    # tree points sit well below 1.0 (single bank), trine points at 1.0
+    a = lenient["availability"]
+    assert np.all((0.0 <= a) & (a <= 1.0))
+    assert a.max() == 1.0 and a.min() < 1.0
+    assert np.all(strict["availability"] == 0.0)
+    assert np.all(a >= strict["availability"])
+    assert strict["best_survivable"] is None
+    assert lenient["best_survivable"] is not None
+    assert lenient["best_survivable"]["config"]["topology"] in ("trine",
+                                                                "tree")
+
+
+def test_pareto_search_accepts_columns_fn():
+    from repro.core.search import pareto_search
+    scenario = MODEL.expected()
+    front = pareto_search(TRAFFIC, topologies=("trine", "tree"),
+                          chunk_size=16, n_lambda=(4.0, 8.0),
+                          columns_fn=faulted_columns_fn(scenario))
+    assert len(front.indices) >= 1
+
+
+# ---------------------------------------------------------------------------
+# fabric degrade + channel replanning
+# ---------------------------------------------------------------------------
+
+
+def test_degrade_healthy_is_identity():
+    fb = get_fabric("trine_siph")
+    fh = degrade(fb, HEALTHY)
+    assert np.isclose(fh.cross_pod_bw_bytes_per_s,
+                      fb.cross_pod_bw_bytes_per_s, rtol=1e-5)
+    assert np.isclose(fh.energy_per_bit_j, fb.energy_per_bit_j, rtol=1e-3)
+
+
+def test_degrade_moves_link_numbers_the_right_way():
+    fb = get_fabric("trine_siph")
+    fd = degrade(fb, MODEL.expected())
+    assert fd.cross_pod_bw_bytes_per_s < fb.cross_pod_bw_bytes_per_s
+    assert fd.energy_per_bit_j > fb.energy_per_bit_j
+    assert fd.name == "trine_siph|expected"
+    assert fd.source.get("degraded") == 1.0
+
+
+def test_degrade_metallic_only_loses_ports():
+    fb = get_fabric("metallic_ici")
+    sc = FaultScenario(failed_gateways=8.0, dead_lambda_frac=0.9,
+                       failed_laser_banks=4.0)
+    fd = degrade(fb, sc)  # photonic knobs are no-ops on metallic links
+    np.testing.assert_allclose(fd.cross_pod_bw_bytes_per_s,
+                               fb.cross_pod_bw_bytes_per_s * 24 / 32)
+
+
+def test_degrade_rejects_batched_scenarios():
+    with pytest.raises(ValueError, match="scalar scenario"):
+        degrade("trine_siph", MODEL.sample(4, rng=0))
+
+
+def test_dead_fabric_hard_fails_channel_planning():
+    dead = degrade("tree_siph", FaultScenario(failed_laser_banks=1.0))
+    assert dead.cross_pod_bw_bytes_per_s == 0.0
+    with pytest.raises(FabricUnusableError):
+        plan_collective_channels(1 << 30, 0.05, fabric=dead)
+    assert overlapped_step_s(0.05, 1 << 30, dead, 4) == float("inf")
+
+
+def test_replanning_recovers_at_least_naive_throughput():
+    fb = get_fabric("trine_siph")
+    fbd = degrade(fb, MODEL.scale(2.0).expected())
+    ch0 = plan_collective_channels(2 << 30, 0.05, fabric=fb, max_channels=64)
+    ch1 = plan_collective_channels(2 << 30, 0.05, fabric=fbd, max_channels=64)
+    assert ch1 >= ch0
+    naive = overlapped_step_s(0.05, 2 << 30, fbd, ch0)
+    replanned = overlapped_step_s(0.05, 2 << 30, fbd, ch1)
+    assert replanned <= naive * (1 + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# trainer / serving fault-epoch hooks
+# ---------------------------------------------------------------------------
+
+CFG = C.get_reduced("yi_6b")
+OPT = OptConfig(lr=1e-3, warmup_steps=2, total_steps=16)
+DATA = DataConfig(global_batch=2, seq_len=64)
+
+
+def _trainer(tmp, fabric=None, resume=True):
+    return Trainer(CFG, OPT, DATA,
+                   TrainerConfig(ckpt_dir=str(tmp), ckpt_every=2,
+                                 log_every=1000),
+                   resume=resume, fabric=fabric)
+
+
+def test_trainer_fault_epoch_loss_continuity(tmp_path):
+    """Inject a fault mid-run: the fabric degrades, the collective replans,
+    and the LOSS TRAJECTORY is untouched (the fault model changes the
+    modeled network time, never the numerics)."""
+    ref = _trainer(tmp_path / "ref", resume=False)
+    ref.run(6, quiet=True)
+
+    tr = _trainer(tmp_path / "fault", fabric="trine_siph", resume=False)
+    net_s_healthy = tr.net_s
+    out = tr.run(6, quiet=True, fault_at=4,
+                 fault_scenario=MODEL.scale(2.0).expected())
+    assert [h["step"] for h in tr.history] == [1, 2, 3, 4, 5, 6]
+    np.testing.assert_allclose([h["loss"] for h in tr.history],
+                               [h["loss"] for h in ref.history], rtol=1e-6)
+    # modeled network time rises at the fault epoch and never recovers
+    assert tr.history[2]["net_s"] == net_s_healthy
+    assert tr.history[3]["net_s"] > net_s_healthy
+    assert out["fabric"].endswith("|expected")
+    assert out["collective_channels"] >= 1
+
+
+def test_trainer_hard_fails_on_unusable_fabric(tmp_path):
+    tr = _trainer(tmp_path, fabric="tree_siph", resume=False)
+    with pytest.raises(FabricUnusableError):
+        tr.run(4, quiet=True, fault_at=2,
+               fault_scenario=FaultScenario(failed_laser_banks=1.0))
+
+
+def test_serving_fault_epoch_token_parity():
+    """The serving fault hook models throughput only: tokens match a
+    fabric-less engine bit-for-bit while net_stats records the fault."""
+    params, _ = M.init(CFG, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    prompts = [list(np.asarray(
+        jax.random.randint(jax.random.fold_in(key, i), (l,), 2, CFG.vocab)))
+        for i, l in enumerate((5, 7))]
+
+    ref = ContinuousBatcher(CFG, params, n_slots=2, max_len=64)
+    for p in prompts:
+        ref.submit(p, 4)
+    ref_out = [r.out for r in sorted(ref.run(), key=lambda r: r.rid)]
+    assert ref.net_stats["modeled_net_s"] == 0.0  # no fabric, no model
+
+    eng = ContinuousBatcher(CFG, params, n_slots=2, max_len=64,
+                            fabric="trine_siph")
+    for p in prompts:
+        eng.submit(p, 4)
+    out = [r.out for r in sorted(
+        eng.run(fault_at_iter=2,
+                fault_scenario=MODEL.scale(2.0).expected()),
+        key=lambda r: r.rid)]
+    assert out == ref_out
+    assert eng.net_stats["fault_iter"] == 2
+    assert eng.net_stats["replans"] == 2  # init plan + fault replan
+    assert eng.net_stats["decode_iters"] >= 4
+    assert eng.net_stats["modeled_net_s"] > 0.0
+    assert eng.fabric.name.endswith("|expected")
+
+
+def test_serving_hard_fails_on_unusable_fabric():
+    params, _ = M.init(CFG, jax.random.PRNGKey(0))
+    eng = ContinuousBatcher(CFG, params, n_slots=2, max_len=64,
+                            fabric="tree_siph")
+    eng.submit([3, 4, 5], 4)
+    with pytest.raises(FabricUnusableError):
+        eng.run(fault_at_iter=1,
+                fault_scenario=FaultScenario(failed_laser_banks=1.0))
