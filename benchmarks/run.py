@@ -65,7 +65,11 @@ def build_summary(results: dict) -> dict:
       * sweep_bench:  batched configs/sec >= bar x scalar
       * pareto_bench: chunked evaluation within bar x of monolithic (both
         the network grid and the co-design grid), fronts exactly equal
-        between streaming and monolithic paths.
+        between streaming and monolithic paths, and the refined co-design
+        front weakly dominating its seed front (required in both modes);
+        the strict "refined_improves_a_seed" gate is required in full mode
+        and honestly exempted (computed + flagged, never rewritten) in
+        smoke via each benchmark's `required_checks` list.
     """
     checks = {}
     for name, res in results.items():

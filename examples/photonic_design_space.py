@@ -10,8 +10,12 @@ per-config Python loops.  The closing sections use the search engine
 (repro.core.search): a streaming per-workload Pareto front over the full
 (topology x gateways x lambda x memory x rate x geometry) space — evaluated
 in fixed-size chunks so memory stays bounded no matter the grid size — a
-joint network x chiplet-mix co-design front, and jax.grad refinement of the
-best frontier point through the continuous columns.
+joint network x chiplet-mix co-design front, jax.grad refinement of the
+best frontier point through the continuous columns, and joint accelerator +
+network refinement of the co-design frontier (`refine_codesign`: relaxed
+descent over per-chiplet n_units/vector_size, mac_rate_hz and
+lambda_slot_energy_j alongside the network axes, snapped back to feasible
+integer designs and round-tripped into a `core.fabric.Fabric`).
 
   PYTHONPATH=src python examples/photonic_design_space.py
   REPRO_SMOKE=1 PYTHONPATH=src python examples/photonic_design_space.py  # tiny grids
@@ -192,6 +196,42 @@ def codesign_search():
     return front, spec, mixes
 
 
+def codesign_refine(front, spec, mixes):
+    """Joint accelerator + network gradient refinement of the co-design
+    frontier (core.search.refine_codesign): relax the discrete accelerator
+    axes, descend, snap back to feasible integer designs, and round-trip
+    the refined winner into a `core.fabric.Fabric` link model."""
+    print("=" * 72)
+    from repro.core.fabric import Fabric
+    from repro.core.search import refine_front
+
+    wl = CNN_WORKLOADS["ResNet18"]()
+    out = refine_front(front, spec, mixes, wl, top_k=3,
+                       steps=8 if SMOKE else 32, lr=0.1)
+    print(f"Co-design refinement: top-3 EDP seeds descended jointly over "
+          f"accelerator + network axes, then round-and-rescored")
+    for r in out["results"]:
+        seed_v, ref_v = r["seed"]["value"], r["refined"]["value"]
+        vecs = "+".join(str(c.vector_size) for c in r["refined"]["chiplets"]
+                        if c.n_units > 0)
+        print(f"  seed #{r['flat_index']}: EDP {seed_v:.3e} -> {ref_v:.3e} "
+              f"({100 * r['improvement']:.1f}% better), "
+              f"chiplet vecs [{vecs}]")
+    print(f"  merged front: {out['seed_front'].size} -> "
+          f"{out['front'].size} points "
+          f"({out['n_improved']}/{len(out['results'])} seeds improved)")
+    top = sorted(out["sensitivity"].items(), key=lambda kv: -kv[1])[:3]
+    print("  most-binding axes (mean |grad| at seed): "
+          + ", ".join(f"{k}={v:.3f}" for k, v in top))
+    # the refined config dicts round-trip straight into the Fabric bridge
+    # (compute-side keys are ignored; network axes override the preset)
+    best = min(out["results"], key=lambda r: r["refined"]["value"])
+    fb = Fabric.from_config(best["refined"]["config"], name="refined-best")
+    print(f"  refined best as Fabric: cross-pod "
+          f"{fb.cross_pod_bw_bytes_per_s / 1e9:.1f} GB/s, "
+          f"link latency {fb.link_latency_s * 1e9:.0f} ns")
+
+
 def fabric_whatif(front, spec, mixes):
     """Frontier -> Fabric link models -> Layer-B roofline what-if: price one
     LLM serving cell (yi_34b decode) under the metallic ICI baseline and
@@ -224,4 +264,6 @@ if __name__ == "__main__":
     sweep_trimming_sensitivity()
     sweep_full_design_space()
     pareto_and_refine()
-    fabric_whatif(*codesign_search())
+    front, spec, mixes = codesign_search()
+    codesign_refine(front, spec, mixes)
+    fabric_whatif(front, spec, mixes)

@@ -68,6 +68,8 @@ from repro.core.search import (
     pareto_mask,
     pareto_search,
     refine_continuous,
+    refine_codesign,
+    refine_front,
 )
 from repro.core.fabric import degrade, overlapped_step_s
 from repro.core.faults import (

@@ -34,7 +34,6 @@ from repro.core.power import (
     Traffic,
     eval_network_math,
     evaluate_network,
-    NetworkReport,
 )
 from repro.core.topology import (
     MODEL_FIELDS,
@@ -64,6 +63,14 @@ class AcceleratorConfig:
     lambda_slot_energy_j: float = 30e-15  # per wavelength-slot MAC energy
     adaptive_gateways: bool = False    # PCMC bandwidth adaptation (SiPh 2.5D)
     transfers_per_layer: int = 16
+
+
+# AccelReport metric fields, in emission order — the accelerator-side metric
+# vocabulary (`core.search.refine_codesign` validates objectives against it)
+ACCEL_REPORT_FIELDS = (
+    "latency_s", "power_w", "energy_j", "epb_j",
+    "compute_s", "network_s", "memory_s", "network_energy_j",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,6 +187,11 @@ def chiplet_mix_columns(mixes: Sequence[Sequence[ChipletSpec]]
         for j, c in enumerate(mix):
             n_units[i, j] = c.n_units
             vec[i, j] = c.vector_size
+    dead = np.where(~(n_units > 0).any(axis=1))[0]
+    if dead.size:
+        raise ValueError(
+            f"chiplet mix(es) {dead.tolist()} have no active (n_units > 0) "
+            "chiplets; an all-zero mix has no compute throughput")
     return {"n_units": n_units, "vector_size": vec}
 
 
@@ -189,16 +201,26 @@ def chiplet_mix_columns(mixes: Sequence[Sequence[ChipletSpec]]
 
 def _layer_compute(accel: AcceleratorConfig, dot_length: int, n_dots: float):
     """Layer split across all chiplets proportionally to their throughput for
-    this dot length.  Returns (seconds, wavelength-slots consumed)."""
+    this dot length.  Returns (seconds, wavelength-slots consumed).
+
+    Zero-unit chiplets (mix padding) carry no compute: they contribute
+    neither throughput nor a slot count, exactly like the vmapped grid
+    kernel's `units > 0` masks."""
     total_thr = 0.0
     slots_per_dot_best = None
     for c in accel.chiplets:
+        if c.n_units <= 0:
+            continue
         passes = -(-dot_length // c.vector_size)  # ceil
         thr = c.n_units * accel.mac_rate_hz / passes  # dots/s on this chiplet
         total_thr += thr
         slots = passes * c.vector_size
         if slots_per_dot_best is None or slots < slots_per_dot_best:
             slots_per_dot_best = slots
+    if slots_per_dot_best is None:
+        raise ValueError(
+            f"accelerator {accel.name!r} has no active (n_units > 0) "
+            "chiplets; an all-zero mix has no compute throughput")
     secs = n_dots / total_thr
     # energy accounting uses the best-matching chiplet's slot count weighted
     # by throughput share; approximate with the best (mapping preference)
@@ -211,12 +233,15 @@ def evaluate_accelerator(
     devices: Optional[DeviceLibrary] = None,
 ) -> AccelReport:
     d = devices or DEFAULT_DEVICES
+    if not any(c.n_units > 0 for c in accel.chiplets):
+        raise ValueError(
+            f"accelerator {accel.name!r} has no active (n_units > 0) "
+            "chiplets; an all-zero mix has no compute throughput")
     total_lat = 0.0
     total_compute = total_net = total_mem = 0.0
     compute_energy = 0.0
     net_energy = 0.0
     total_bits = 0.0
-    static_net_power_probe: Optional[NetworkReport] = None
 
     for layer in wl.layers:
         c_s, slots = _layer_compute(accel, layer.dot_length, layer.n_dots)
@@ -241,7 +266,6 @@ def evaluate_accelerator(
         total_mem += mem_s
         net_energy += rep.energy_j
         total_bits += t.total_bits
-        static_net_power_probe = rep
 
     energy = compute_energy + net_energy
     return AccelReport(
@@ -268,7 +292,7 @@ def _to_device(x) -> jax.Array:
 
 
 def _accel_mix_math(cc, frac_ov, lc, nets, dev, mem_bw, mac_rate, slot_e,
-                    xfers, *, adaptive: bool):
+                    xfers, *, adaptive: bool, relaxed: bool = False):
     """One chiplet mix against (N,) network configs and (L,) workload layers
     — pure jnp; `jax.vmap` lifts the mix axis, `jax.jit` compiles the result.
 
@@ -279,10 +303,21 @@ def _accel_mix_math(cc, frac_ov, lc, nets, dev, mem_bw, mac_rate, slot_e,
     frac_ov : optional precomputed PCMC activation, (L,) or (N, L); when
         None and `adaptive`, the planner runs in-kernel per (config, layer)
     returns (N,)-shaped AccelReport fields.
+
+    With ``relaxed=True`` the pass count drops its ceil — ``max(L/V, 1)``
+    instead of ``ceil(L/V)`` — so every accelerator axis (per-chiplet
+    `n_units`/`vector_size` as positive reals, `mac_rate_hz`,
+    `lambda_slot_energy_j`) carries a nonzero gradient: the continuous
+    relaxation `core.search.refine_codesign` descends before snapping back
+    to integers and re-scoring exactly (relaxed=False).  The two modes
+    agree wherever V divides L and the relaxed pass count is >= 1; the
+    zero-unit masks stay: padding rows are exact zeros, never descended.
     """
     vec = cc["vector_size"][:, None]                            # (C, 1)
     units = cc["n_units"][:, None]
-    passes = jnp.ceil(lc["dot_length"][None, :] / vec)          # (C, L)
+    raw_passes = lc["dot_length"][None, :] / vec                # (C, L)
+    passes = (jnp.maximum(raw_passes, 1.0) if relaxed
+              else jnp.ceil(raw_passes))
     thr = jnp.where(units > 0, units * mac_rate / passes, 0.0)
     total_thr = thr.sum(0)                                      # (L,)
     slots = jnp.where(units > 0, passes * vec, jnp.inf).min(0)  # (L,)

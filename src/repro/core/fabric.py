@@ -82,6 +82,11 @@ METALLIC_ICI_BW = 50e9         # bytes/s per metallic ICI link
 # power model (large enough that per-transfer overheads are amortized)
 _PROBE = Traffic(bytes_read=1 << 30, bytes_written=1 << 30, n_transfers=16)
 
+# config-dict keys that describe the accelerator's compute side, not the
+# interposer link model — `from_config`/`fabrics_from_front` drop them
+_COMPUTE_SIDE_KEYS = ("mix", "chiplets", "mac_rate_hz",
+                      "lambda_slot_energy_j")
+
 
 @dataclasses.dataclass(frozen=True)
 class Fabric:
@@ -157,17 +162,18 @@ class Fabric:
         **kwargs,
     ) -> "Fabric":
         """Build a Fabric from a config dict — the format `GridSpec.
-        config_at`, `SweepResult.config_at`, and `codesign_config_at`
-        emit: a "topology" key plus swept-axis overrides (NetworkParams
-        fields, dotted device leaves, "n_subnetworks").  Chiplet-mix keys
-        ("mix", "chiplets") are ignored: the mix changes compute, not the
-        interposer link model."""
+        config_at`, `SweepResult.config_at`, `codesign_config_at`, and
+        `refine_codesign`'s refined point emit: a "topology" key plus
+        swept-axis overrides (NetworkParams fields, dotted device leaves,
+        "n_subnetworks").  Compute-side keys ("mix", "chiplets",
+        "mac_rate_hz", "lambda_slot_energy_j") are ignored: they change the
+        accelerator's compute, not the interposer link model."""
         from repro.core.sweep import grid_spec  # local: avoid import cycle
 
         cfg = dict(cfg)
         topology = str(cfg.pop("topology"))
-        cfg.pop("mix", None)
-        cfg.pop("chiplets", None)
+        for key in _COMPUTE_SIDE_KEYS:
+            cfg.pop(key, None)
         if topology not in TOPOLOGY_ARRAYS:
             raise KeyError(f"unknown topology {topology!r}")
         spec = grid_spec((topology,), devices=devices)
@@ -261,7 +267,7 @@ def fabrics_from_front(
     seen = set()
     for idx, cfg in zip(front.indices, frontier_configs(front, spec, mixes)):
         net_cfg = {k: v for k, v in cfg.items()
-                   if k not in ("mix", "chiplets")}
+                   if k not in _COMPUTE_SIDE_KEYS}
         key = tuple(sorted((k, float(v) if k != "topology" else v)
                            for k, v in net_cfg.items()))
         if key in seen:

@@ -51,8 +51,11 @@ def choose_subnetworks_arr(n_lambda, modulation_rate_bps, n_mem_chiplets,
     the round/ceil quantization is piecewise-constant (zero gradient).
 
     `round_mode` picks the power-of-two snap for the raw K = ceil(mem/wg):
-      "paper"  nearest power of two (the paper's 9 -> 8 choice) — may round
-               DOWN below the memory bandwidth,
+      "paper"  geometrically (log-space) nearest power of two — the paper's
+               9 -> 8 choice, implemented as 2**round(log2 K).  This differs
+               from the arithmetically nearest power of two (k=6 ->
+               2**round(2.585) = 8, though |6-4| = |6-8|) and may round DOWN
+               below the memory bandwidth,
       "cover"  next power of two up — the smallest pow2 K that actually
                covers mem_bw (never under-provisions).
     Both are clamped to the gateway count."""
@@ -78,9 +81,11 @@ def choose_subnetworks(p: "NetworkParams", round_mode: str = "paper") -> int:
     100 GB/s memory interface per subnet group): 100 GB/s = 800 Gb/s,
     waveguide = 8 lambda * 12 Gb/s = 96 Gb/s  =>  raw K = ceil(800/96) = 9.
     The default ``round_mode="paper"`` reproduces the paper's choice — the
-    NEAREST power of two (9 -> 8: "we opted for 8 subnetworks to use the
-    maximum bandwidth offered by memory chiplets") — which can round DOWN
-    below the memory bandwidth it nominally matches.  Pass
+    GEOMETRICALLY (log-space) nearest power of two, 2**round(log2 K)
+    (9 -> 8: "we opted for 8 subnetworks to use the maximum bandwidth
+    offered by memory chiplets").  Note this is not the arithmetically
+    nearest power of two (k=6 snaps up to 8, not down to 4) and it can
+    round DOWN below the memory bandwidth it nominally matches.  Pass
     ``round_mode="cover"`` for the smallest power-of-two K with
     K * wg_bw >= mem_bw (next power of two up; 9 -> 16), which never
     under-provisions.

@@ -27,6 +27,12 @@ import jax.numpy as jnp
 from repro.core.devices import DeviceLibrary, DEFAULT_DEVICES, laser_electrical_power_w
 from repro.core.topology import NetworkModel
 
+# metric columns `eval_network_math` emits == NetworkReport fields — the
+# network-side metric vocabulary.  `core.sweep.METRIC_FIELDS` aliases this,
+# and `core.search.refine_continuous` validates objective names against it.
+EVAL_METRIC_FIELDS = ("power_w", "latency_s", "energy_j", "energy_per_bit_j",
+                      "laser_power_w", "trimming_power_w")
+
 # device leaves the batched metric kernel reads (the topology kernels consume
 # the rest); `eval_network_math` expects exactly these keys in its `dev` dict
 EVAL_DEVICE_FIELDS = (

@@ -37,6 +37,21 @@ refines frontiers:
                              columns (losses, rates, bandwidths, geometry),
                              descended with a projected (log-space, boxed)
                              gradient loop from a Pareto point.
+  refine_codesign(...)       the co-design analog: joint relaxed descent
+                             over accelerator axes (per-chiplet n_units /
+                             vector_size, mac_rate_hz, lambda_slot_energy_j)
+                             AND network axes, seeded from a codesign_pareto
+                             frontier row, then round-and-rescore — snap the
+                             discrete axes to integer neighbors and exactly
+                             re-score every candidate through the grid
+                             kernel, so the reported point is always a
+                             feasible integer design, never worse than its
+                             seed.
+  refine_front(...)          frontier-wide driver: refine every (or top-k)
+                             row, merge the refined points back with
+                             merge_fronts (the result weakly dominates the
+                             seed front by construction — asserted), report
+                             per-axis gradient-magnitude sensitivities.
 
 Dominance convention (weak Pareto): point q dominates p iff q <= p in every
 objective and q != p in at least one; exact duplicates do not dominate each
@@ -47,6 +62,7 @@ better in every objective.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -55,9 +71,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.power import EVAL_DEVICE_FIELDS, Traffic, eval_network_math
-from repro.core.topology import TOPOLOGY_ARRAYS
+from repro.core.topology import MODEL_FIELDS, TOPOLOGY_ARRAYS
 from repro.core.sweep import (
     DEFAULT_TOPOLOGIES,
+    INTEGER_AXES,
+    METRIC_FIELDS,
     ChunkReducer,
     GridSpec,
     SweepChunk,
@@ -74,6 +92,7 @@ __all__ = [
     "merge_fronts", "pareto_front", "ParetoReducer", "pareto_search",
     "codesign_pareto", "codesign_config_at", "frontier_configs",
     "refine_continuous", "refine_front_point", "DEFAULT_REFINE_AXES",
+    "refine_codesign", "refine_front", "ACCEL_REFINE_AXES",
 ]
 
 # the paper's three reported quantities, all minimized
@@ -419,12 +438,18 @@ def codesign_pareto(
     from repro.core.accelerator import evaluate_accelerator_grid
 
     objectives = tuple(objectives)
+    if not mixes:
+        raise ValueError("empty mixes: need at least one chiplet mix")
     spec = grid_spec(topologies, devices=devices, **axes)
     n = spec.n
+    if n == 0:
+        raise ValueError(
+            "empty grid: every swept axis (and `topologies`) needs at "
+            "least one value")
     n_mix = len(mixes)
     front: Optional[ParetoFront] = None
     mix_off = np.arange(n_mix, dtype=np.int64)[:, None] * n
-    step = int(min(max(1, chunk_size), n)) if n else 0
+    step = int(min(max(1, chunk_size), n))
     for start in range(0, n, step):
         stop = min(start + step, n)
         cols, topo_id = spec.chunk_cols(start, stop)
@@ -448,8 +473,7 @@ def codesign_pareto(
             axis=-1).reshape(n_mix * valid, len(objectives))
         idx = (mix_off + np.arange(start, stop)[None, :]).reshape(-1)
         front = _merge_into(front, pts, idx, objectives)
-    if front is None:
-        raise ValueError("empty grid")
+    assert front is not None  # n > 0 and n_mix > 0 guarantee >= 1 chunk
     return front, spec
 
 
@@ -487,6 +511,47 @@ DEFAULT_REFINE_AXES: Tuple[str, ...] = (
     "mzi.insertion_loss_db")
 
 
+def _check_objective(objective: str, vocabulary: Sequence[str],
+                     where: str) -> None:
+    """Eager objective-name validation: fail with the valid vocabulary
+    before any tracing happens (a bare KeyError surfacing from deep inside
+    a jitted loss names no valid options and wastes the compile)."""
+    if objective != "edp" and objective not in vocabulary:
+        raise ValueError(
+            f"unknown {where} objective {objective!r}; valid objectives "
+            f"are 'edp' or one of {list(vocabulary)}")
+
+
+def _projected_descent(value_and_grad, theta0, lo, hi, steps: int,
+                       lr: float):
+    """Log-space projected gradient descent shared by the refiners:
+    theta <- clip(theta - lr * grad, lo, hi), tracking the best iterate
+    ever visited (the trajectory is not monotone across quantization
+    boundaries).  Returns (best_loss, best_theta, trace, grad0) where
+    grad0 is the float64 gradient at theta0 — the per-axis sensitivity
+    `refine_codesign` reports."""
+    theta = theta0
+    best_loss, best_theta = np.inf, theta
+    trace: List[float] = []
+    grad0: Optional[np.ndarray] = None
+    for _ in range(steps):
+        v, g = value_and_grad(theta)
+        if grad0 is None:
+            grad0 = np.asarray(g, np.float64)
+        v = float(v)
+        trace.append(v)
+        if v < best_loss:
+            best_loss, best_theta = v, theta
+        theta = jnp.clip(theta - lr * g, lo, hi)
+    v_end = float(value_and_grad(theta)[0])
+    trace.append(v_end)
+    if v_end < best_loss:
+        best_loss, best_theta = v_end, theta
+    if grad0 is None:  # steps == 0: report a zero sensitivity vector
+        grad0 = np.zeros(np.shape(theta0), np.float64)
+    return best_loss, best_theta, trace, grad0
+
+
 def refine_continuous(
     topology: str,
     overrides: Mapping[str, float],
@@ -520,6 +585,7 @@ def refine_continuous(
     """
     if topology not in TOPOLOGY_ARRAYS:
         raise KeyError(f"unknown topology {topology!r}")
+    _check_objective(objective, METRIC_FIELDS, "refine_continuous")
     spec = grid_spec((topology,), devices=devices)
     cols: Dict[str, float] = dict(spec.base)
     for k, v in overrides.items():
@@ -564,20 +630,9 @@ def refine_continuous(
     value_and_grad = jax.jit(jax.value_and_grad(loss_of))
     metrics_jit = jax.jit(metrics_of)
 
-    theta = jnp.clip(jnp.log(_as_f64(x0)), lo, hi)
-    best_loss, best_theta = np.inf, theta
-    trace: List[float] = []
-    for _ in range(steps):
-        v, g = value_and_grad(theta)
-        v = float(v)
-        trace.append(v)
-        if v < best_loss:
-            best_loss, best_theta = v, theta
-        theta = jnp.clip(theta - lr * g, lo, hi)
-    v_end = float(value_and_grad(theta)[0])
-    trace.append(v_end)
-    if v_end < best_loss:
-        best_loss, best_theta = v_end, theta
+    theta0 = jnp.clip(jnp.log(_as_f64(x0)), lo, hi)
+    best_loss, best_theta, trace, _ = _projected_descent(
+        value_and_grad, theta0, lo, hi, steps, lr)
 
     # projection happens in (possibly float32) log-space; snap the reported
     # values back inside the exact float64 box
@@ -611,3 +666,464 @@ def refine_front_point(
     cfg = spec.config_at(int(index))
     topology = cfg.pop("topology")
     return refine_continuous(topology, cfg, traffic, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# Co-design gradient refinement: accelerator + network axes jointly
+# --------------------------------------------------------------------------
+
+
+# the relaxable accelerator-side axes: per-chiplet unit/vector counts plus
+# the two compute-rate/energy scalars of `core.accelerator._accel_mix_math`
+ACCEL_REFINE_AXES: Tuple[str, ...] = (
+    "n_units", "vector_size", "mac_rate_hz", "lambda_slot_energy_j")
+
+
+def _objective_value(metrics: Mapping[str, object], objective: str):
+    """Scalarize a metric dict: "edp" = energy * latency, anything else is
+    the metric itself.  Works on floats and on (M, N) metric grids."""
+    if objective == "edp":
+        return (np.asarray(metrics["energy_j"], np.float64)
+                * np.asarray(metrics["latency_s"], np.float64))
+    return np.asarray(metrics[objective], np.float64)
+
+
+def _int_neighbors(v: float, extra: Optional[float] = None,
+                   lo: int = 1) -> List[int]:
+    """Admissible integer neighbors of a relaxed value: floor and ceil
+    (clamped at `lo`), plus the seed's original value when given — the
+    fallback that keeps the round-and-rescore candidate set from ever
+    excluding the known-feasible seed setting."""
+    opts = {int(np.floor(v)), int(np.ceil(v))}
+    if extra is not None:
+        opts.add(int(round(extra)))
+    return sorted(o for o in opts if o >= lo) or [lo]
+
+
+def refine_codesign(
+    spec: GridSpec,
+    mixes: Sequence,
+    wl: Workload,
+    flat_index: int,
+    *,
+    refine_axes: Sequence[str] = DEFAULT_REFINE_AXES,
+    accel_axes: Sequence[str] = ACCEL_REFINE_AXES,
+    objective: str = "edp",
+    steps: int = 32,
+    lr: float = 0.1,
+    span: float = 4.0,
+    bounds: Optional[Mapping[str, Tuple[float, float]]] = None,
+    mac_rate_hz: float = 5e9,
+    lambda_slot_energy_j: float = 30e-15,
+    adaptive_gateways: bool = True,
+    transfers_per_layer: int = 16,
+    max_candidates: int = 1024,
+) -> Dict[str, object]:
+    """Jointly refine one `codesign_pareto` frontier point over accelerator
+    AND network axes, then snap back to a feasible integer design.
+
+    Seeds from flat index `flat_index` (decoded via `codesign_config_at`),
+    relaxes the accelerator axes continuously (the grid kernel's
+    ``relaxed=True`` mode replaces ceil(L/V) with max(L/V, 1) so per-chiplet
+    `n_units`/`vector_size`, `mac_rate_hz` and `lambda_slot_energy_j` all
+    carry nonzero gradients; zero-unit padding chiplets stay exactly
+    masked), and runs the same log-space projected-descent loop as
+    `refine_continuous` over the concatenated accelerator + `refine_axes`
+    network parameter vector.
+
+    Round-and-rescore: every discrete axis (per-chiplet vector_size /
+    n_units, and any refined network axis in `core.sweep.INTEGER_AXES`) is
+    snapped to its floor/ceil integer neighbors (seed value kept as a
+    fallback for the network axes), every candidate combination is re-scored
+    EXACTLY through `evaluate_accelerator_grid` (relaxed=False), and the
+    best candidate wins — re-scored once more as a single (M=1, N=1) cell
+    so the reported metrics are bit-identical to any later standalone
+    evaluation of that design.  If no candidate beats the seed's exact
+    score, the seed is returned (improvement 0.0): the refined point is
+    always a feasible integer design and never worse than its seed.
+    Candidates whose network settings the topology rejects (e.g. SPACX
+    with < 8 gateways) are filtered out before scoring.
+
+    Returns a dict with "seed"/"refined" {config, metrics, value} (configs
+    are `core.fabric.Fabric.from_config`-consumable), "improvement"
+    (fractional objective gain, >= 0), per-axis gradient-magnitude
+    "sensitivity" at the seed, the descent "loss_trace", the "relaxed"
+    (pre-snap) axis values, and "n_candidates" scored.
+    """
+    from repro.core.accelerator import (
+        ACCEL_REPORT_FIELDS, ChipletSpec, _accel_mix_math,
+        evaluate_accelerator_grid, layer_columns)
+
+    _check_objective(objective, ACCEL_REPORT_FIELDS, "refine_codesign")
+    bad = [a for a in accel_axes if a not in ACCEL_REFINE_AXES]
+    if bad:
+        raise KeyError(
+            f"unknown accelerator refine axes {bad!r}; valid axes are "
+            f"{list(ACCEL_REFINE_AXES)}")
+
+    cfg = codesign_config_at(spec, mixes, flat_index)
+    seed_mix = [ChipletSpec(int(c.n_units), int(c.vector_size))
+                for c in cfg.pop("chiplets")]
+    mix_id = cfg.pop("mix")
+    topology = cfg.pop("topology")
+    kern = TOPOLOGY_ARRAYS[topology]
+
+    cols: Dict[str, float] = dict(spec.base)
+    for k, v in cfg.items():
+        cols[k] = float(v)
+    net_names = tuple(refine_axes)
+    for nm in net_names:
+        if nm not in cols:
+            raise KeyError(f"unknown refine axis {nm!r}")
+        if cols[nm] <= 0:
+            raise ValueError(f"refine axis {nm!r} must be positive")
+
+    # ---- parameter vector: network axes ++ relaxed accelerator axes ----
+    C = len(seed_mix)
+    active = [j for j in range(C) if seed_mix[j].n_units > 0]
+    entries: List[Tuple[str, object, float]] = [
+        ("net", nm, cols[nm]) for nm in net_names]
+    if "n_units" in accel_axes:
+        entries += [("units", j, float(seed_mix[j].n_units))
+                    for j in active]
+    if "vector_size" in accel_axes:
+        entries += [("vec", j, float(seed_mix[j].vector_size))
+                    for j in active]
+    if "mac_rate_hz" in accel_axes:
+        entries.append(("mac", None, float(mac_rate_hz)))
+    if "lambda_slot_energy_j" in accel_axes:
+        entries.append(("slot", None, float(lambda_slot_energy_j)))
+    if not entries:
+        raise ValueError(
+            "nothing to refine: refine_axes and accel_axes are both empty")
+
+    def _label(kind, key):
+        if kind == "net":
+            return key
+        if kind == "units":
+            return f"n_units[{key}]"
+        if kind == "vec":
+            return f"vector_size[{key}]"
+        return "mac_rate_hz" if kind == "mac" else "lambda_slot_energy_j"
+
+    labels = [_label(k, j) for k, j, _ in entries]
+    x0 = np.asarray([v for _, _, v in entries], np.float64)
+    lo_f, hi_f = x0 / span, x0 * span
+    for i, (kind, _, _) in enumerate(entries):
+        if kind in ("units", "vec"):  # count axes never relax below 1
+            lo_f[i] = max(lo_f[i], 1.0)
+            hi_f[i] = max(hi_f[i], 1.0)
+    if bounds:
+        for i, lb in enumerate(labels):
+            if lb in bounds:
+                lo_f[i], hi_f[i] = bounds[lb]
+    lo, hi = jnp.log(_as_f64(lo_f)), jnp.log(_as_f64(hi_f))
+
+    # ---- relaxed differentiable loss: topology kernel + accel kernel ----
+    lc = {k: _as_f64(v) for k, v in layer_columns(wl).items()}
+    units0 = _as_f64([float(c.n_units) for c in seed_mix])
+    vec0 = _as_f64([float(c.vector_size) for c in seed_mix])
+    xfers = _as_f64(float(transfers_per_layer))
+
+    def relaxed_metrics(theta):
+        x = jnp.exp(theta)
+        c = {k: _as_f64(v) for k, v in cols.items()}
+        units, vec = units0, vec0
+        mac, slot = _as_f64(mac_rate_hz), _as_f64(lambda_slot_energy_j)
+        for i, (kind, key, _) in enumerate(entries):
+            if kind == "net":
+                c[key] = x[i]
+            elif kind == "units":
+                units = units.at[key].set(x[i])
+            elif kind == "vec":
+                vec = vec.at[key].set(x[i])
+            elif kind == "mac":
+                mac = x[i]
+            else:
+                slot = x[i]
+        fields = kern(c, xp=jnp)
+        nets1 = {k: jnp.reshape(fields[k], (1,)) for k in MODEL_FIELDS}
+        dev1 = {k: jnp.reshape(c[k], (1,)) for k in EVAL_DEVICE_FIELDS}
+        mem_bw1 = jnp.reshape(
+            c["n_mem_chiplets"] * c["mem_bw_bytes_per_s"], (1,))
+        m = _accel_mix_math(
+            {"n_units": units, "vector_size": vec}, None, lc, nets1, dev1,
+            mem_bw1, mac, slot, xfers, adaptive=adaptive_gateways,
+            relaxed=True)
+        return {k: v[0] for k, v in m.items()}
+
+    def loss_of(theta):
+        m = relaxed_metrics(theta)
+        if objective == "edp":
+            return jnp.log(m["energy_j"]) + jnp.log(m["latency_s"])
+        return jnp.log(m[objective])
+
+    value_and_grad = jax.jit(jax.value_and_grad(loss_of))
+    theta0 = jnp.clip(jnp.log(_as_f64(x0)), lo, hi)
+    _, best_theta, trace, grad0 = _projected_descent(
+        value_and_grad, theta0, lo, hi, steps, lr)
+    sensitivity = {lb: float(abs(g)) for lb, g in zip(labels, grad0)}
+    x_best = np.clip(np.exp(np.asarray(best_theta, np.float64)), lo_f, hi_f)
+
+    # ---- round-and-rescore: snap discrete axes, score exactly, keep best --
+    refined_net = {nm: float(cols[nm]) for nm in net_names}
+    refined_units = np.asarray([float(c.n_units) for c in seed_mix])
+    refined_vec = np.asarray([float(c.vector_size) for c in seed_mix])
+    refined_mac = float(mac_rate_hz)
+    refined_slot = float(lambda_slot_energy_j)
+    for i, (kind, key, _) in enumerate(entries):
+        v = float(x_best[i])
+        if kind == "net":
+            refined_net[key] = v
+        elif kind == "units":
+            refined_units[key] = v
+        elif kind == "vec":
+            refined_vec[key] = v
+        elif kind == "mac":
+            refined_mac = v
+        else:
+            refined_slot = v
+
+    unit_opts = [[seed_mix[j].n_units] for j in range(C)]
+    vec_opts = [[seed_mix[j].vector_size] for j in range(C)]
+    if "n_units" in accel_axes:
+        for j in active:
+            unit_opts[j] = _int_neighbors(refined_units[j])
+    if "vector_size" in accel_axes:
+        for j in active:
+            vec_opts[j] = _int_neighbors(refined_vec[j])
+    net_int = [nm for nm in net_names if nm in INTEGER_AXES]
+    net_opts = {nm: _int_neighbors(refined_net[nm], extra=cols[nm])
+                for nm in net_int}
+
+    n_mix_full = int(np.prod([len(u) * len(v)
+                              for u, v in zip(unit_opts, vec_opts)]))
+    n_net_full = int(np.prod([len(v) for v in net_opts.values()])
+                     ) if net_opts else 1
+    if n_mix_full * n_net_full <= max_candidates:
+        per_chip = [[(u, v) for u in uo for v in vo]
+                    for uo, vo in zip(unit_opts, vec_opts)]
+        mix_cands = [tuple(chips) for chips in itertools.product(*per_chip)]
+        net_cands = [dict(zip(net_opts, vals))
+                     for vals in itertools.product(*net_opts.values())]
+    else:
+        # corner count exploded past max_candidates: score the nearest-
+        # rounded design plus every single-axis flip instead of the full
+        # cross product
+        near_u = [min(uo, key=lambda o: abs(o - refined_units[j]))
+                  for j, uo in enumerate(unit_opts)]
+        near_v = [min(vo, key=lambda o: abs(o - refined_vec[j]))
+                  for j, vo in enumerate(vec_opts)]
+        base = tuple(zip(near_u, near_v))
+        mix_cands = [base]
+        for j in range(C):
+            for u in unit_opts[j]:
+                if u != near_u[j]:
+                    alt = list(base)
+                    alt[j] = (u, near_v[j])
+                    mix_cands.append(tuple(alt))
+            for v in vec_opts[j]:
+                if v != near_v[j]:
+                    alt = list(base)
+                    alt[j] = (near_u[j], v)
+                    mix_cands.append(tuple(alt))
+        near_net = {nm: min(net_opts[nm],
+                            key=lambda o: abs(o - refined_net[nm]))
+                    for nm in net_opts}
+        net_cands = [dict(near_net)]
+        for nm in net_opts:
+            for o in net_opts[nm]:
+                if o != near_net[nm]:
+                    alt = dict(near_net)
+                    alt[nm] = o
+                    net_cands.append(alt)
+    seed_net = {nm: int(round(cols[nm])) for nm in net_int}
+    if seed_net not in net_cands:
+        net_cands.append(seed_net)
+
+    # drop candidates the topology itself rejects (e.g. SPACX < 8 gateways)
+    valid_net = []
+    for cand in net_cands:
+        c1 = {k: np.full(1, v, np.float64) for k, v in cols.items()}
+        for nm in net_names:
+            c1[nm][:] = refined_net[nm]
+        for nm, v in cand.items():
+            c1[nm][:] = float(v)
+        try:
+            kern(c1)
+        except (ValueError, FloatingPointError):
+            continue
+        valid_net.append(cand)
+    if not valid_net:
+        # even the seed integers fail under the refined continuous values:
+        # retreat to the seed network configuration wholesale
+        valid_net = [seed_net]
+        for nm in net_names:
+            if nm not in net_int:
+                refined_net[nm] = float(cols[nm])
+
+    n_net = len(valid_net)
+    cand_cols = {k: np.full(n_net, v, np.float64) for k, v in cols.items()}
+    for nm in net_names:
+        cand_cols[nm][:] = refined_net[nm]
+    for i, cand in enumerate(valid_net):
+        for nm, v in cand.items():
+            cand_cols[nm][i] = float(v)
+    nets = _network_columns_arrays(
+        cand_cols, np.zeros(n_net, np.int64), (topology,))
+    mem_bw = cand_cols["n_mem_chiplets"] * cand_cols["mem_bw_bytes_per_s"]
+    cand_mixes = [[ChipletSpec(int(u), int(v)) for (u, v) in chips]
+                  for chips in mix_cands]
+    out = evaluate_accelerator_grid(
+        wl, cand_mixes, nets, cand_cols, mem_bw,
+        mac_rate_hz=refined_mac, lambda_slot_energy_j=refined_slot,
+        adaptive_gateways=adaptive_gateways,
+        transfers_per_layer=transfers_per_layer)
+    score = _objective_value(out, objective)
+    mi, ni = np.unravel_index(int(np.argmin(score)), score.shape)
+
+    def _score_single(mix, net_vals: Mapping[str, float], mac, slot):
+        """Exact (M=1, N=1) score — bit-identical to any later standalone
+        `evaluate_accelerator_grid` call on the same design."""
+        c1 = {k: np.full(1, v, np.float64) for k, v in cols.items()}
+        for nm, v in net_vals.items():
+            c1[nm][:] = float(v)
+        n1 = _network_columns_arrays(c1, np.zeros(1, np.int64), (topology,))
+        mbw = c1["n_mem_chiplets"] * c1["mem_bw_bytes_per_s"]
+        o = evaluate_accelerator_grid(
+            wl, [mix], n1, c1, mbw, mac_rate_hz=mac,
+            lambda_slot_energy_j=slot, adaptive_gateways=adaptive_gateways,
+            transfers_per_layer=transfers_per_layer)
+        return {k: float(v[0, 0]) for k, v in o.items()}
+
+    win_net = dict(refined_net)
+    win_net.update({nm: float(v) for nm, v in valid_net[ni].items()})
+    win_mix = cand_mixes[mi]
+    win_metrics = _score_single(win_mix, win_net, refined_mac, refined_slot)
+    win_value = float(_objective_value(win_metrics, objective))
+    seed_metrics = _score_single(
+        seed_mix, {}, float(mac_rate_hz), float(lambda_slot_energy_j))
+    seed_value = float(_objective_value(seed_metrics, objective))
+
+    seed_cfg: Dict[str, object] = {"topology": topology, **cfg}
+    seed_cfg.update({
+        "mix": mix_id, "chiplets": list(seed_mix),
+        "mac_rate_hz": float(mac_rate_hz),
+        "lambda_slot_energy_j": float(lambda_slot_energy_j)})
+    if win_value < seed_value:
+        ref_cfg: Dict[str, object] = {"topology": topology, **cfg}
+        for nm in net_names:
+            ref_cfg[nm] = float(win_net[nm])
+        ref_cfg.update({
+            "mix": mix_id, "chiplets": list(win_mix),
+            "mac_rate_hz": refined_mac,
+            "lambda_slot_energy_j": refined_slot})
+        refined = {"config": ref_cfg, "metrics": win_metrics,
+                   "value": win_value, "chiplets": list(win_mix)}
+    else:
+        # no snapped candidate beat the exact seed score: keep the seed, so
+        # the refined point is never worse than where it started
+        refined = {"config": dict(seed_cfg), "metrics": dict(seed_metrics),
+                   "value": seed_value, "chiplets": list(seed_mix)}
+
+    return {
+        "flat_index": int(flat_index),
+        "topology": topology,
+        "objective": objective,
+        "labels": labels,
+        "seed": {"config": seed_cfg, "metrics": seed_metrics,
+                 "value": seed_value},
+        "refined": refined,
+        "improvement": float(1.0 - refined["value"] / seed_value),
+        "sensitivity": sensitivity,
+        "loss_trace": trace,
+        "relaxed": {lb: float(x_best[i]) for i, lb in enumerate(labels)},
+        "n_candidates": len(cand_mixes) * n_net,
+    }
+
+
+def _front_objective(front: ParetoFront, objective: str) -> np.ndarray:
+    """Scalar objective of each front row from its stored columns ("edp" =
+    energy * latency); falls back to the first objective column when the
+    requested metric isn't one the front tracks."""
+    names = list(front.objectives)
+    if objective == "edp" and {"energy_j", "latency_s"} <= set(names):
+        return (front.points[:, names.index("energy_j")]
+                * front.points[:, names.index("latency_s")])
+    if objective in names:
+        return front.points[:, names.index(objective)]
+    return front.points[:, 0]
+
+
+def refine_front(
+    front: ParetoFront,
+    spec: GridSpec,
+    mixes: Sequence,
+    wl: Workload,
+    *,
+    top_k: Optional[int] = None,
+    objective: str = "edp",
+    **kwargs,
+) -> Dict[str, object]:
+    """Refine every (or the `top_k` best-objective) row of a
+    `codesign_pareto` front through `refine_codesign`, then merge the
+    refined integer designs back into the seed front with `merge_fronts`.
+
+    Merging unions the point sets, so the merged front weakly dominates the
+    seed front by construction — asserted before returning (a violation
+    would mean the exact rescore and the front machinery disagree, i.e. a
+    real bug).  Per-axis gradient-magnitude sensitivities are averaged
+    across the refined seeds: which axis the objective is most elastic to
+    along this frontier.
+
+    Returns {"front", "seed_front", "results", "configs", "n_improved",
+    "sensitivity"}.  `configs` decodes every merged-front row — refined
+    rows to their snapped refined config, surviving seed rows via
+    `codesign_config_at` — each directly consumable by
+    `core.fabric.Fabric.from_config`.
+    """
+    if front.size == 0:
+        raise ValueError("empty front: nothing to refine")
+    order = np.argsort(_front_objective(front, objective), kind="stable")
+    chosen = order if top_k is None else order[:max(1, int(top_k))]
+    results = [refine_codesign(spec, mixes, wl, int(front.indices[i]),
+                               objective=objective, **kwargs)
+               for i in chosen]
+    obj_names = front.objectives
+    ref_pts = np.asarray(
+        [[r["refined"]["metrics"][k] for k in obj_names] for r in results],
+        np.float64)
+    ref_idx = np.asarray([r["flat_index"] for r in results], np.int64)
+    merged = merge_fronts(front, ParetoFront(obj_names, ref_pts, ref_idx))
+
+    # weak-dominance gate: every seed point must be dominated by, or still
+    # present in, the merged front
+    dom = _dominated_by(front.points, merged.points)
+    present = np.asarray([
+        bool(np.all(merged.points == p, axis=1).any())
+        for p in front.points])
+    if not bool(np.all(dom | present)):
+        raise AssertionError(
+            "refined front fails to weakly dominate its seed front")
+
+    ref_map = {(int(r["flat_index"]), tuple(pt)): r["refined"]["config"]
+               for r, pt in zip(results, ref_pts)}
+    configs: List[Dict[str, object]] = []
+    for i in range(merged.size):
+        key = (int(merged.indices[i]), tuple(merged.points[i]))
+        hit = ref_map.get(key)
+        configs.append(hit if hit is not None else
+                       codesign_config_at(spec, mixes,
+                                          int(merged.indices[i])))
+    sens: Dict[str, List[float]] = {}
+    for r in results:
+        for lb, v in r["sensitivity"].items():
+            sens.setdefault(lb, []).append(v)
+    return {
+        "front": merged,
+        "seed_front": front,
+        "results": results,
+        "configs": configs,
+        "n_improved": int(sum(r["improvement"] > 0 for r in results)),
+        "sensitivity": {lb: float(np.mean(v)) for lb, v in sens.items()},
+    }

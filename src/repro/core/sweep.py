@@ -86,6 +86,7 @@ from repro.core.topology import (
 )
 from repro.core.power import (
     EVAL_DEVICE_FIELDS,
+    EVAL_METRIC_FIELDS,
     Traffic,
     eval_network_math as eval_math,
     evaluate_network,
@@ -98,7 +99,8 @@ from repro.core.accelerator import (  # noqa: F401  (re-exported; see below)
 __all__ = [
     "SweepGrid", "SweepResult", "build_grid", "network_columns",
     "evaluate_columns", "sweep", "sweep_scalar_reference",
-    "evaluate_accelerator_batch", "METRIC_FIELDS", "DEFAULT_TOPOLOGIES",
+    "evaluate_accelerator_batch", "METRIC_FIELDS", "INTEGER_AXES",
+    "DEFAULT_TOPOLOGIES",
     "GridSpec", "grid_spec", "SweepChunk", "ChunkReducer", "MinReducer",
     "sweep_chunked", "eval_math",
 ]
@@ -109,9 +111,15 @@ DEFAULT_TOPOLOGIES: Tuple[str, ...] = ("sprint", "spacx", "tree", "trine", "elec
 _INT_PARAM_FIELDS = frozenset({"n_gateways", "n_mem_chiplets", "n_lambda",
                                "gateway_width_bits"})
 
+# grid axes whose admissible values are integers: the int NetworkParams
+# fields plus the TRINE subnetwork override.  `core.search.refine_codesign`
+# snaps relaxed values of these axes back to integer neighbors during
+# round-and-rescore; everything else in the axis vocabulary is continuous.
+INTEGER_AXES = _INT_PARAM_FIELDS | {"n_subnetworks"}
+
 # metric columns emitted by the batched evaluator == NetworkReport fields
-METRIC_FIELDS = ("power_w", "latency_s", "energy_j", "energy_per_bit_j",
-                 "laser_power_w", "trimming_power_w")
+# (defined in core.power next to the math that emits them)
+METRIC_FIELDS = EVAL_METRIC_FIELDS
 
 # device leaves the power kernel reads (re-exported; defined in core.power
 # next to the shared metric math)

@@ -12,6 +12,7 @@ chunked streaming evaluator (core.sweep.sweep_chunked):
     finite differences of the scalar dataclass path
 """
 
+import functools
 import os
 
 import numpy as np
@@ -48,7 +49,9 @@ from repro.core.search import (
     pareto_mask,
     pareto_mask_reference,
     pareto_search,
+    refine_codesign,
     refine_continuous,
+    refine_front,
     refine_front_point,
 )
 
@@ -344,6 +347,72 @@ def test_grad_matches_finite_differences(axis, x0):
     assert g == pytest.approx(fd, rel=5e-2, abs=5e-3), (g, fd)
 
 
+def _relaxed_accel_log_edp(axis, j, value):
+    """log-EDP of the relaxed accelerator kernel with one accelerator axis
+    overridden by (traced) `value` — the loss `refine_codesign` descends.
+    mac_rate is tiny so compute binds and the accelerator axes genuinely
+    carry gradient; adaptive PCMC is off so the FD interval crosses no
+    activation-step quantization boundary."""
+    from repro.core.accelerator import _accel_mix_math, layer_columns
+    from repro.core.topology import MODEL_FIELDS
+    wl = CNN_WORKLOADS["LeNet5"]()
+    spec = grid_spec(("trine",))
+    cols = {k: jnp.asarray(np.float64(v)) for k, v in spec.base.items()}
+    lc = {k: jnp.asarray(v) for k, v in layer_columns(wl).items()}
+    units = jnp.asarray(np.asarray([96.0, 48.0]))
+    vec = jnp.asarray(np.asarray([9.0, 49.0]))
+    mac = jnp.asarray(np.float64(1e8))
+    slot = jnp.asarray(np.float64(30e-15))
+    if axis == "n_units":
+        units = units.at[j].set(value)
+    elif axis == "vector_size":
+        vec = vec.at[j].set(value)
+    elif axis == "mac_rate_hz":
+        mac = value
+    else:
+        slot = value
+    fields = TOPOLOGY_ARRAYS["trine"](cols, xp=jnp)
+    nets1 = {k: jnp.reshape(fields[k], (1,)) for k in MODEL_FIELDS}
+    dev1 = {k: jnp.reshape(cols[k], (1,)) for k in EVAL_DEVICE_FIELDS}
+    mem_bw1 = jnp.reshape(
+        cols["n_mem_chiplets"] * cols["mem_bw_bytes_per_s"], (1,))
+    m = _accel_mix_math({"n_units": units, "vector_size": vec}, None, lc,
+                        nets1, dev1, mem_bw1, mac, slot,
+                        jnp.asarray(np.float64(16.0)),
+                        adaptive=False, relaxed=True)
+    return jnp.log(m["energy_j"][0]) + jnp.log(m["latency_s"][0])
+
+
+@pytest.mark.parametrize("axis,j,x0", [
+    ("n_units", 0, 96.0),
+    ("n_units", 1, 48.0),
+    ("vector_size", 0, 9.0),
+    ("mac_rate_hz", None, 1e8),
+    ("lambda_slot_energy_j", None, 30e-15),
+])
+def test_relaxed_accel_grad_matches_finite_differences(axis, j, x0):
+    """jax.grad through the relaxed accelerator kernel (max(L/V, 1) pass
+    count) equals float64 central finite differences of the same relaxed
+    function, for every relaxable accelerator axis — mirroring the network-
+    axis gradient checks above."""
+    from jax.experimental import enable_x64
+
+    def loss(theta):
+        return _relaxed_accel_log_edp(axis, j, jnp.exp(theta))
+
+    theta0 = float(np.log(x0))
+    g = float(jax.grad(loss)(jnp.asarray(theta0, jnp.float32)))
+    h = 0.02
+    with enable_x64():
+        f_hi = float(loss(jnp.asarray(theta0 + h, jnp.float64)))
+        f_lo = float(loss(jnp.asarray(theta0 - h, jnp.float64)))
+    fd = (f_hi - f_lo) / (2 * h)
+    assert g == pytest.approx(fd, rel=5e-2, abs=5e-3), (g, fd)
+    if axis in ("n_units", "mac_rate_hz"):
+        # compute-bound by construction: these axes must genuinely move EDP
+        assert abs(fd) > 1e-3, fd
+
+
 def test_refine_continuous_improves_and_respects_bounds():
     t = CNN_WORKLOADS["ResNet18"]().traffic()
     r = refine_continuous("trine", {"n_gateways": 32}, t, steps=25, lr=0.1,
@@ -363,3 +432,129 @@ def test_refine_front_point_from_pareto_search():
     r = refine_front_point(spec, t, int(front.indices[0]), steps=10, lr=0.1)
     assert r["refined_value"] <= r["start_value"]
     assert r["topology"] in ("trine", "tree")
+
+
+# ---------------------------------------------------------------------------
+# guards: empty grids / mixes and eager objective validation
+# ---------------------------------------------------------------------------
+
+
+def test_codesign_pareto_empty_grid_and_mixes_raise():
+    """Regression: an empty grid used to reach range(0, 0, 0) deep in the
+    chunk loop (ValueError: range() arg 3 must not be zero); empty mixes
+    crashed inside the mix-column builder.  Both must fail up front."""
+    wl = CNN_WORKLOADS["LeNet5"]()
+    mixes = [[ChipletSpec(256, 9)]]
+    with pytest.raises(ValueError, match="empty grid"):
+        codesign_pareto(wl, mixes, n_gateways=())
+    with pytest.raises(ValueError, match="empty grid"):
+        codesign_pareto(wl, mixes, topologies=())
+    with pytest.raises(ValueError, match="chiplet mix"):
+        codesign_pareto(wl, [])
+
+
+def test_refine_objective_validated_eagerly():
+    """Regression: an unknown objective used to surface as a bare KeyError
+    from deep inside the jitted loss; both refiners must reject it before
+    tracing, naming the valid vocabulary."""
+    t = CNN_WORKLOADS["LeNet5"]().traffic()
+    with pytest.raises(ValueError, match="valid objectives"):
+        refine_continuous("trine", {}, t, objective="edp_j")
+    wl, mixes, front, spec = _codesign_refine_setup()
+    with pytest.raises(ValueError, match="valid objectives"):
+        refine_codesign(spec, mixes, wl, int(front.indices[0]),
+                        objective="edp_j")
+    # metric objectives from each vocabulary still work
+    r = refine_continuous("trine", {}, t, objective="power_w", steps=2)
+    assert r["objective"] == "power_w"
+
+
+# ---------------------------------------------------------------------------
+# co-design refinement: relaxed descent + round-and-rescore
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def _codesign_refine_setup():
+    wl = CNN_WORKLOADS["LeNet5"]()
+    mixes = [[ChipletSpec(256, 9), ChipletSpec(128, 49)],
+             [ChipletSpec(512, 32)],
+             [ChipletSpec(128, 9), ChipletSpec(128, 27),
+              ChipletSpec(64, 128)]]
+    axes = dict(n_gateways=(16, 32), n_lambda=(4, 8))
+    front, spec = codesign_pareto(wl, mixes, topologies=("trine", "tree"),
+                                  chunk_size=7, **axes)
+    return wl, mixes, front, spec
+
+
+def test_refine_codesign_round_and_rescore_feasible_and_exact():
+    """The refined point is always a feasible integer design, and its
+    reported metrics are bit-identical to a standalone exact re-score of
+    the refined config through `evaluate_accelerator_grid`."""
+    from repro.core.accelerator import evaluate_accelerator_grid
+    from repro.core.sweep import _network_columns_arrays
+    wl, mixes, front, spec = _codesign_refine_setup()
+    r = refine_codesign(spec, mixes, wl, int(front.indices[0]), steps=8)
+    cfg = r["refined"]["config"]
+    for c in cfg["chiplets"]:
+        assert isinstance(c.n_units, int) and isinstance(c.vector_size, int)
+        assert c.vector_size >= 1 and c.n_units >= 0
+    assert any(c.n_units > 0 for c in cfg["chiplets"])
+    # grid axes the refiner does not touch keep admissible integer values
+    for nm in ("n_gateways", "n_lambda"):
+        assert cfg[nm] == float(int(cfg[nm]))
+    cols = {k: np.full(1, v, np.float64) for k, v in spec.base.items()}
+    for k, v in cfg.items():
+        if k in cols:
+            cols[k][:] = float(v)
+    nets = _network_columns_arrays(cols, np.zeros(1, np.int64),
+                                   (cfg["topology"],))
+    out = evaluate_accelerator_grid(
+        wl, [cfg["chiplets"]], nets, cols,
+        cols["n_mem_chiplets"] * cols["mem_bw_bytes_per_s"],
+        mac_rate_hz=cfg["mac_rate_hz"],
+        lambda_slot_energy_j=cfg["lambda_slot_energy_j"])
+    for k, v in r["refined"]["metrics"].items():
+        assert float(out[k][0, 0]) == v, k
+
+
+def test_refine_codesign_improves_at_least_one_seed():
+    """Acceptance: on >= 3 frontier seeds the refiner returns feasible
+    integer designs, never worse than the seed, strictly better on at
+    least one."""
+    wl, mixes, front, spec = _codesign_refine_setup()
+    order = np.argsort(front.points[:, 0] * front.points[:, 1])
+    results = [refine_codesign(spec, mixes, wl, int(front.indices[i]),
+                               steps=12)
+               for i in order[:3]]
+    for r in results:
+        for c in r["refined"]["chiplets"]:
+            assert isinstance(c.n_units, int)
+            assert isinstance(c.vector_size, int)
+        assert r["refined"]["value"] <= r["seed"]["value"]
+        assert r["improvement"] >= 0.0
+        assert set(r["sensitivity"]) >= {"modulation_rate_bps",
+                                         "mac_rate_hz"}
+    assert any(r["improvement"] > 0 for r in results)
+
+
+def test_refine_front_dominates_seed_and_configs_roundtrip():
+    """Property: the merged refined front weakly dominates the seed front
+    (checked against the O(n^2) reference), and every merged row decodes to
+    a config (refined rows to their refined design)."""
+    wl, mixes, front, spec = _codesign_refine_setup()
+    out = refine_front(front, spec, mixes, wl, top_k=3, steps=6)
+    merged, seed = out["front"], out["seed_front"]
+    union = np.concatenate([merged.points, seed.points])
+    seed_on_union = pareto_mask_reference(union)[merged.size:]
+    seed_present = np.array([bool((merged.points == p).all(-1).any())
+                             for p in seed.points])
+    assert np.all(~seed_on_union | seed_present)
+    assert len(out["configs"]) == merged.size
+    for cfg in out["configs"]:
+        assert cfg["topology"] in ("trine", "tree")
+        assert "chiplets" in cfg
+    assert 0 <= out["n_improved"] <= len(out["results"])
+    # sensitivities cover both network and accelerator axes
+    assert set(out["sensitivity"]) >= {"modulation_rate_bps",
+                                       "lambda_slot_energy_j"}

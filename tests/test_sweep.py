@@ -153,3 +153,39 @@ def test_accelerator_batch_matches_scalar(accel_factory, wl_name):
     for f in ("latency_s", "power_w", "energy_j", "epb_j", "compute_s",
               "network_s", "memory_s", "network_energy_j"):
         assert getattr(b, f) == pytest.approx(getattr(a, f), rel=RTOL), f
+
+
+def test_accelerator_zero_unit_padding_parity():
+    """Zero-unit chiplets (mix padding) must be inert on the scalar path,
+    exactly as the vmapped kernel masks them: a padded accelerator scores
+    identically to its unpadded twin, on both evaluation paths.  Regression:
+    the scalar `_layer_compute` used to let a ChipletSpec(0, 1) row pollute
+    slots_per_dot_best (vec=1 always wins the slot minimum)."""
+    from repro.core import ChipletSpec
+    wl = CNN_WORKLOADS["LeNet5"]()
+    clean = crosslight_25d_siph()
+    padded = dataclasses.replace(
+        clean, chiplets=list(clean.chiplets) + [ChipletSpec(0, 1)])
+    for f in ("latency_s", "power_w", "energy_j", "epb_j", "compute_s",
+              "network_s", "memory_s", "network_energy_j"):
+        assert getattr(evaluate_accelerator(padded, wl), f) == \
+            getattr(evaluate_accelerator(clean, wl), f), f
+        assert getattr(evaluate_accelerator_batch(padded, wl), f) == \
+            pytest.approx(getattr(evaluate_accelerator_batch(clean, wl), f),
+                          rel=RTOL), f
+
+
+def test_accelerator_all_zero_mix_raises():
+    """An all-zero chiplet mix has no compute throughput: both the scalar
+    path and the batched mix-columns builder must fail loudly instead of
+    dividing by zero."""
+    from repro.core import ChipletSpec
+    from repro.core.accelerator import chiplet_mix_columns
+    wl = CNN_WORKLOADS["LeNet5"]()
+    clean = crosslight_25d_siph()
+    dead = dataclasses.replace(
+        clean, chiplets=[ChipletSpec(0, 9), ChipletSpec(0, 49)])
+    with pytest.raises(ValueError, match="no active"):
+        evaluate_accelerator(dead, wl)
+    with pytest.raises(ValueError, match="no active"):
+        chiplet_mix_columns([[ChipletSpec(512, 32)], [ChipletSpec(0, 9)]])
