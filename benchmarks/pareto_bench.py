@@ -1,12 +1,20 @@
 """Pareto/co-design search benchmark: chunked streaming vs monolithic vs
 scalar evaluation, with exact front verification.
 
-Three sections:
+Four sections:
 
   * network grid — the pure interposer-network design space (topology x
     gateways x lambda x memory BW x modulation x geometry x device corner):
     monolithic `sweep` vs `sweep_chunked` streaming vs the scalar dataclass
     loop (sampled), plus streaming-vs-monolithic Pareto front equality.
+  * streaming pipeline — the same streaming engine timed in its three
+    execution modes on a >= 1e6-point grid (full mode): host-serial
+    (per-chunk numpy materialization, prefetch 0), device-serial (jitted
+    mixed-radix decode, prefetch 0), and device-pipelined (decode + a
+    depth-2 prefetch queue overlapping host folds with device compute).
+    All three must return bit-identical MinReducer states; the pipelined
+    path must beat host-serial by >= 1.2x in full mode (reported but
+    exempted in smoke, where per-chunk dispatch dominates the tiny grid).
   * co-design grid — the same network axes crossed with a chiplet-mix
     library through the vmapped accelerator kernel: >= 1e6 joint design
     points in full mode, evaluated chunked under bounded memory, with the
@@ -58,9 +66,10 @@ from repro.core.search import (
 )
 from repro.core.sweep import (
     ChunkReducer,
-    _network_columns_arrays,
+    MinReducer,
     build_grid,
     grid_spec,
+    network_columns_device,
     sweep,
     sweep_chunked,
 )
@@ -90,6 +99,13 @@ SMOKE_NET_AXES = dict(
     mem_bw_bytes_per_s=(50e9, 100e9, 200e9),
     modulation_rate_bps=(10e9, 12e9),
 )
+
+# extra axis for the pipeline section: 138240 x 8 = 1,105,920 streaming rows
+PIPE_EXTRA_AXIS = dict(n_mem_chiplets=(2, 3, 4, 6, 8, 12, 16, 24))
+
+# the device-pipelined streaming path must beat the host-serial streaming
+# path by this factor on the full-mode (>= 1e6 point) grid
+PIPELINE_SPEEDUP_BAR = 1.2
 
 
 def _mix_library(smoke: bool):
@@ -272,13 +288,54 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
         "best_config": stream_front.configs(spec)[0],
     }
 
+    # ---- section A2: streaming pipeline, host-serial vs device-pipelined -
+    pipe_axes = dict(axes) if smoke else dict(axes, **PIPE_EXTRA_AXIS)
+    n_pipe = grid_spec(TOPOLOGIES, **pipe_axes).n
+    pipe_chunk = max(1, n_pipe // 3) if smoke else 65536
+
+    def _stream(mat: str, depth: int):
+        return sweep_chunked(
+            traffic, MinReducer("energy_j"), topologies=TOPOLOGIES,
+            chunk_size=pipe_chunk, materialize=mat, prefetch=depth,
+            **pipe_axes)
+
+    _stream("device", 2)  # compile decode + engine at the pipeline shape
+    reps = 3 if smoke else 2
+    host_s, host_best = _best_of(lambda: _stream("host", 0), repeats=reps)
+    dev_s, dev_best = _best_of(lambda: _stream("device", 0), repeats=reps)
+    pipe_s, pipe_best = _best_of(lambda: _stream("device", 2), repeats=reps)
+    pipe_identical = (
+        host_best["index"] == dev_best["index"] == pipe_best["index"]
+        and host_best["value"] == dev_best["value"] == pipe_best["value"])
+    pipe_speedup = host_s / pipe_s
+    pipeline = {
+        "n_configs": n_pipe,
+        "chunk_size": pipe_chunk,
+        "prefetch_depth": 2,
+        "host_serial_s": host_s,
+        "device_serial_s": dev_s,
+        "pipelined_s": pipe_s,
+        "host_serial_configs_per_s": n_pipe / host_s,
+        "device_serial_configs_per_s": n_pipe / dev_s,
+        "pipelined_configs_per_s": n_pipe / pipe_s,
+        "pipelined_over_host_serial": pipe_speedup,
+        "overlap_gain_over_device_serial": dev_s / pipe_s,
+        "speedup_bar": PIPELINE_SPEEDUP_BAR,
+        "best_index": int(host_best["index"]),
+        "best_energy_j": float(host_best["value"]),
+    }
+
     # ---- section B: co-design grid (network x chiplet mix) ---------------
+    # both reference paths build nets with the SAME traced program the
+    # streaming co-design engine runs (network_columns_device) — XLA and
+    # numpy transcendentals differ in the last ulp, so the exact-front
+    # equality checks below require the traced nets, not the numpy path
     def eval_chunked():
         rows = 0
         for start in range(0, n_net, cd_chunk):
             stop = min(start + cd_chunk, n_net)
             cols, topo_id = spec.chunk_cols(start, stop)
-            nets = _network_columns_arrays(cols, topo_id, spec.topologies)
+            nets = network_columns_device(cols, topo_id, spec.topologies)
             evaluate_accelerator_grid(
                 wl, mixes, nets, cols,
                 cols["n_mem_chiplets"] * cols["mem_bw_bytes_per_s"])
@@ -287,7 +344,7 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
 
     def eval_monolithic():
         cols, topo_id = spec.chunk_cols(0, n_net)
-        nets = _network_columns_arrays(cols, topo_id, spec.topologies)
+        nets = network_columns_device(cols, topo_id, spec.topologies)
         return evaluate_accelerator_grid(
             wl, mixes, nets, cols,
             cols["n_mem_chiplets"] * cols["mem_bw_bytes_per_s"])
@@ -297,7 +354,7 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
     # best-of keeps the warm repeat)
     cols_w, topo_w = spec.chunk_cols(0, min(cd_chunk, n_net))
     evaluate_accelerator_grid(
-        wl, mixes, _network_columns_arrays(cols_w, topo_w, spec.topologies),
+        wl, mixes, network_columns_device(cols_w, topo_w, spec.topologies),
         cols_w, cols_w["n_mem_chiplets"] * cols_w["mem_bw_bytes_per_s"])
     cd_chunk_s, _ = _best_of(eval_chunked, repeats=3 if smoke else 2)
 
@@ -415,22 +472,31 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
             codesign["chunked_over_monolithic"] <= ratio_bar,
         "batched_over_scalar_bar": network["batched_over_scalar"]
             >= speedup_bar,
+        "pipeline_modes_bit_identical": bool(pipe_identical),
+        "pipeline_grid_at_least_1e6": n_pipe >= 1_000_000,
+        "pipelined_speedup_at_least_1p2":
+            pipe_speedup >= PIPELINE_SPEEDUP_BAR,
         "refinement_improves": refine["improvement"] >= -1e-12,
         "refined_front_dominates_seed": refined_dominates,
         "refined_improves_a_seed": rf["n_improved"] >= 1,
     }
-    # mode-dependent expectations (the grid size, and whether a handful of
-    # smoke-length descent steps must strictly beat an exactly-scored seed)
-    # are exempted in smoke but still computed and flagged — never silently
-    # rewritten; every other check must hold in both modes.  The dominance
-    # gate is required in BOTH modes: merging can never lose seed points.
-    smoke_exempt = ("codesign_grid_at_least_1e6", "refined_improves_a_seed")
+    # mode-dependent expectations (the grid sizes, timing bars that a tiny
+    # CI grid cannot amortize, and whether a handful of smoke-length descent
+    # steps must strictly beat an exactly-scored seed) are exempted in smoke
+    # but still computed and flagged — never silently rewritten; every other
+    # check must hold in both modes.  The dominance gate and the pipeline
+    # bit-identity gate are required in BOTH modes: merging can never lose
+    # seed points, and scheduling can never change results.
+    smoke_exempt = ("codesign_grid_at_least_1e6", "refined_improves_a_seed",
+                    "pipeline_grid_at_least_1e6",
+                    "pipelined_speedup_at_least_1p2")
     required = [k for k in checks if smoke is False or k not in smoke_exempt]
     out = {
         "smoke": smoke,
         "ratio_bar": ratio_bar,
         "speedup_bar": speedup_bar,
         "network": network,
+        "pipeline": pipeline,
         "codesign": codesign,
         "refine": {k: refine[k] for k in
                    ("start_value", "refined_value", "improvement",
@@ -453,6 +519,12 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
         print(f"pareto/net_scalar,{1e6 / scalar_cps:.2f},"
               f"{scalar_cps:,.0f} cfg/s; batched "
               f"{network['batched_over_scalar']:.0f}x (bar {speedup_bar}x)")
+        print(f"pareto/pipeline,{pipe_s * 1e6 / n_pipe:.2f},"
+              f"{n_pipe} rows: host-serial {n_pipe / host_s:,.0f} cfg/s, "
+              f"device-serial {n_pipe / dev_s:,.0f} cfg/s, pipelined "
+              f"{n_pipe / pipe_s:,.0f} cfg/s "
+              f"({pipe_speedup:.2f}x host-serial, bar "
+              f"{PIPELINE_SPEEDUP_BAR}x)")
         print(f"pareto/codesign,{cd_mono_s * 1e6 / n_joint:.3f},"
               f"{n_joint} joint pts, chunked "
               f"{codesign['chunked_over_monolithic']:.2f}x mono, "

@@ -2,8 +2,10 @@
 the roofline report.  Prints ``name,us_per_call,derived`` CSV and writes a
 consolidated ``artifacts/summary.json`` with every benchmark's checks and
 the cross-benchmark perf-regression gates (batched >= 20x scalar, chunked
-within 1.5x of monolithic — smoke runs use each benchmark's recorded smoke
-bar).
+within 1.5x of monolithic, device-pipelined streaming >= 1.2x host-serial on
+the full-mode grid — smoke runs use each benchmark's recorded smoke bar).
+Also writes ``artifacts/BENCH_9.json``, the perf-trajectory artifact for the
+streaming engine (configs/sec by path, overlap gains, grid sizes).
 
   PYTHONPATH=src:. python -m benchmarks.run
 """
@@ -102,6 +104,18 @@ def build_summary(results: dict) -> dict:
             ratio = pareto_res[section]["chunked_over_monolithic"]
             perf[f"chunked_over_monolithic_{section}"] = {
                 "value": ratio, "bar": bar, "pass": ratio <= bar}
+        # device-pipelined streaming vs host-serial materialization: gated
+        # only on the full-mode (>= 1e6 point) grid — the smoke grid cannot
+        # amortize per-chunk dispatch, and pareto_bench already records the
+        # smoke value via its exempted required_checks entry
+        pipe = pareto_res.get("pipeline")
+        if pipe and not pareto_res["smoke"]:
+            perf["pipelined_over_serial"] = {
+                "value": pipe["pipelined_over_host_serial"],
+                "bar": pipe["speedup_bar"],
+                "pass": (pipe["pipelined_over_host_serial"]
+                         >= pipe["speedup_bar"]),
+            }
 
     ok = all(checks.values()) and all(p["pass"] for p in perf.values())
     return {"checks": checks, "perf": perf, "pass": ok,
@@ -113,6 +127,45 @@ def write_summary(results: dict) -> dict:
     ARTIFACTS.mkdir(exist_ok=True)
     (ARTIFACTS / "summary.json").write_text(json.dumps(summary, indent=2))
     return summary
+
+
+def build_bench9(results: dict) -> dict:
+    """Perf-trajectory artifact for the streaming-engine work (BENCH_9):
+    the throughput numbers a future regression hunt needs in one place —
+    batched vs scalar configs/sec, chunked-vs-monolithic ratios, and the
+    pipeline overlap figures, each tagged with the grid it ran on."""
+    sweep_res = results.get("sweep") or {}
+    pareto_res = results.get("pareto") or {}
+    pipe = pareto_res.get("pipeline") or {}
+    return {
+        "bench": "device_resident_streaming_pipeline",
+        "smoke": bool(pareto_res.get("smoke", sweep_res.get("smoke", True))),
+        "batched_configs_per_s": sweep_res.get("batched_configs_per_s"),
+        "scalar_configs_per_s": sweep_res.get("scalar_configs_per_s"),
+        "batched_over_scalar": sweep_res.get("speedup"),
+        "pipelined_configs_per_s": sweep_res.get("pipelined_configs_per_s"),
+        "chunked_over_monolithic": {
+            s: (pareto_res.get(s) or {}).get("chunked_over_monolithic")
+            for s in ("network", "codesign")},
+        "pipeline": pipe,
+        "pipelined_over_host_serial": pipe.get("pipelined_over_host_serial"),
+        "overlap_gain_over_device_serial":
+            pipe.get("overlap_gain_over_device_serial"),
+        "grid_sizes": {
+            "sweep": sweep_res.get("n_configs"),
+            "network": (pareto_res.get("network") or {}).get("n_configs"),
+            "pipeline": pipe.get("n_configs"),
+            "codesign_joint":
+                (pareto_res.get("codesign") or {}).get("n_joint_points"),
+        },
+    }
+
+
+def write_bench9(results: dict) -> dict:
+    bench = build_bench9(results)
+    ARTIFACTS.mkdir(exist_ok=True)
+    (ARTIFACTS / "BENCH_9.json").write_text(json.dumps(bench, indent=2))
+    return bench
 
 
 def main() -> None:
@@ -140,6 +193,12 @@ def main() -> None:
     results["resilience"] = resilience_bench.run()
 
     summary = write_summary(results)
+    bench9 = write_bench9(results)
+    print("# perf trajectory -> artifacts/BENCH_9.json")
+    if bench9["pipelined_over_host_serial"] is not None:
+        print(f"bench9/pipelined_over_host_serial,0,"
+              f"{bench9['pipelined_over_host_serial']:.2f}x on "
+              f"{bench9['grid_sizes']['pipeline']} rows")
     print("# consolidated summary -> artifacts/summary.json")
     for k, p in summary["perf"].items():
         print(f"summary/perf/{k},0,{p['value']:.2f} vs bar {p['bar']} "

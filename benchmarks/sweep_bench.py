@@ -1,6 +1,9 @@
 """Sweep-engine throughput benchmark: configs/sec of the scalar per-config
 dataclass loop vs the batched struct-of-arrays path (core.sweep), on the same
-design-space grid, plus an element-for-element output parity check.
+design-space grid, plus an element-for-element output parity check.  Also
+times the device-pipelined streaming path (jitted mixed-radix decode +
+depth-2 prefetch) and requires its running argmin to be bit-identical to the
+monolithic sweep.
 
 The acceptance bar for the batched engine is >= 20x configs/sec over the
 scalar loop on a >= 4096-point grid.  REPRO_SMOKE=1 shrinks the grid (and the
@@ -16,7 +19,8 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import CNN_WORKLOADS
-from repro.core.sweep import sweep, sweep_scalar_reference
+from repro.core.sweep import (MinReducer, sweep, sweep_chunked,
+                              sweep_scalar_reference)
 from repro.env import smoke_mode
 
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
@@ -60,6 +64,22 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
     batched_s = time.perf_counter() - t0
     batched_cps = n / batched_s
 
+    # device-pipelined streaming over the same grid (jitted decode, depth-2
+    # prefetch): bounded memory at batched-comparable throughput, and the
+    # running argmin must be bit-identical to the monolithic sweep
+    chunk = max(1, n // 8)
+
+    def _stream():
+        return sweep_chunked(traffic, MinReducer("energy_j"),
+                             topologies=TOPOLOGIES, chunk_size=chunk,
+                             materialize="device", prefetch=2, **axes)
+
+    best = _stream()  # warm the decode/engine programs at the chunk shape
+    t0 = time.perf_counter()
+    best = _stream()
+    pipelined_s = time.perf_counter() - t0
+    pipelined_cps = n / pipelined_s
+
     # scalar loop over the identical grid (subsampled axes in smoke mode only)
     t0 = time.perf_counter()
     ref = sweep_scalar_reference(traffic, topologies=TOPOLOGIES, **axes)
@@ -80,6 +100,11 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
         "grid_at_least_4096": n >= 4096,
         "speedup_over_bar": speedup >= bar,
         "batched_matches_scalar": max_rel < 1e-4,
+        # the streaming pipeline's argmin is bit-identical to the monolithic
+        # sweep (required in both modes — scheduling never changes results)
+        "pipelined_matches_batched": bool(
+            best["value"] == res.metrics["energy_j"][best["index"]]
+            and best["index"] == int(np.argmin(res.metrics["energy_j"]))),
     }
     required = [k for k in checks if not (smoke and k == "grid_at_least_4096")]
     out = {
@@ -88,6 +113,9 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
         "scalar_s": scalar_s,
         "batched_configs_per_s": batched_cps,
         "scalar_configs_per_s": scalar_cps,
+        "pipelined_s": pipelined_s,
+        "pipelined_configs_per_s": pipelined_cps,
+        "pipeline_chunk_size": chunk,
         "speedup": speedup,
         "speedup_bar": bar,
         "max_rel_err": max_rel,
@@ -103,6 +131,9 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
     if csv:
         print(f"sweep/batched,{batched_s * 1e6 / n:.2f},"
               f"{batched_cps:,.0f} cfg/s over {n} configs")
+        print(f"sweep/pipelined,{pipelined_s * 1e6 / n:.2f},"
+              f"{pipelined_cps:,.0f} cfg/s streaming (chunk {chunk}, "
+              f"depth 2)")
         print(f"sweep/scalar,{scalar_s * 1e6 / n:.2f},"
               f"{scalar_cps:,.0f} cfg/s over {n} configs")
         print(f"sweep/speedup,0,{speedup:.1f}x (bar {bar:.0f}x);"

@@ -32,6 +32,7 @@ from repro.core.devices import DeviceLibrary, DEFAULT_DEVICES, device_columns
 from repro.core.power import (
     EVAL_DEVICE_FIELDS,
     Traffic,
+    engine_x64,
     eval_network_math,
     evaluate_network,
 )
@@ -287,8 +288,20 @@ def evaluate_accelerator(
 
 
 def _to_device(x) -> jax.Array:
-    # float64 when jax_enable_x64 is on, namespace default otherwise
+    # float64 when jax_enable_x64 is on, namespace default otherwise; arrays
+    # already on the device (the streaming engine's decoded chunk columns)
+    # pass through untouched — no host round-trip on the hot path
+    if isinstance(x, jax.Array):
+        return x
     return jnp.asarray(np.asarray(x, np.float64))
+
+
+def _bcast_col(v, n: int) -> jax.Array:
+    """(n,) device column from a scalar/column that may already live on the
+    device (kept there) or on the host (converted once)."""
+    if isinstance(v, jax.Array):
+        return jnp.broadcast_to(v, (n,))
+    return jnp.asarray(np.broadcast_to(np.asarray(v, np.float64), (n,)))
 
 
 def _accel_mix_math(cc, frac_ov, lc, nets, dev, mem_bw, mac_rate, slot_e,
@@ -391,44 +404,49 @@ def evaluate_accelerator_grid(
     adaptive_gateways: bool = True,
     transfers_per_layer: int = 16,
     frac: Optional[np.ndarray] = None,
+    as_numpy: bool = True,
 ) -> Dict[str, np.ndarray]:
     """Joint (chiplet-mix x network-config) accelerator evaluation in one
     jitted call: M mixes x N network configs x all L workload layers.
 
     `nets` holds MODEL_FIELDS columns and `dev_cols` EVAL_DEVICE_FIELDS
     columns, each (N,) or scalar (a sweep-chunk's `nets`/`cols` dicts fit
-    directly); `mem_bw_bytes_per_s` likewise.  Returns (M, N) float64 arrays
-    for every AccelReport field.  `frac` optionally overrides the in-kernel
-    PCMC planner with a precomputed activation of shape (M, L) or (M, N, L)
-    — `evaluate_accelerator_batch` uses that to keep its float64 host-side
-    planner rounding.  Memory is O(M * N * L); stream big network grids in
-    chunks (see `core.search.codesign_pareto`).
+    directly); `mem_bw_bytes_per_s` likewise.  Columns that are already jax
+    arrays stay on the device (zero host round-trips — the streaming
+    co-design path feeds decoded chunks straight through).  Always evaluates
+    in float64 (`power.engine_x64`), matching the sweep engine's fixed
+    precision.  Returns (M, N) float64 arrays for every AccelReport field —
+    numpy by default, device arrays with ``as_numpy=False`` (so a pipelined
+    caller can defer the host sync to its fold point).  `frac` optionally
+    overrides the in-kernel PCMC planner with a precomputed activation of
+    shape (M, L) or (M, N, L) — `evaluate_accelerator_batch` uses that to
+    keep its float64 host-side planner rounding.  Memory is O(M * N * L);
+    stream big network grids in chunks (see `core.search.codesign_pareto`).
     """
-    lc = {k: _to_device(v) for k, v in layer_columns(wl).items()}
-    cc = {k: _to_device(v) for k, v in chiplet_mix_columns(mixes).items()}
-    shape = np.broadcast_shapes(
-        *(np.shape(nets[k]) for k in MODEL_FIELDS),
-        *(np.shape(dev_cols[k]) for k in EVAL_DEVICE_FIELDS),
-        np.shape(mem_bw_bytes_per_s))
-    n = int(shape[0]) if shape else 1
-    nets_j = {k: _to_device(np.broadcast_to(
-        np.asarray(nets[k], np.float64), (n,))) for k in MODEL_FIELDS}
-    dev_j = {k: _to_device(np.broadcast_to(
-        np.asarray(dev_cols[k], np.float64), (n,)))
-        for k in EVAL_DEVICE_FIELDS}
-    mem_bw_j = _to_device(np.broadcast_to(
-        np.asarray(mem_bw_bytes_per_s, np.float64), (n,)))
-    mac = _to_device(mac_rate_hz)
-    slot = _to_device(lambda_slot_energy_j)
-    xfers = _to_device(transfers_per_layer)
-    if frac is None:
-        out = _grid_kernel(bool(adaptive_gateways), False)(
-            cc, lc, nets_j, dev_j, mem_bw_j, mac, slot, xfers)
-    else:
-        out = _grid_kernel(bool(adaptive_gateways), True)(
-            cc, _to_device(frac), lc, nets_j, dev_j, mem_bw_j, mac, slot,
-            xfers)
-    return {k: np.asarray(v, np.float64) for k, v in out.items()}
+    with engine_x64():
+        lc = {k: _to_device(v) for k, v in layer_columns(wl).items()}
+        cc = {k: _to_device(v) for k, v in chiplet_mix_columns(mixes).items()}
+        shape = np.broadcast_shapes(
+            *(np.shape(nets[k]) for k in MODEL_FIELDS),
+            *(np.shape(dev_cols[k]) for k in EVAL_DEVICE_FIELDS),
+            np.shape(mem_bw_bytes_per_s))
+        n = int(shape[0]) if shape else 1
+        nets_j = {k: _bcast_col(nets[k], n) for k in MODEL_FIELDS}
+        dev_j = {k: _bcast_col(dev_cols[k], n) for k in EVAL_DEVICE_FIELDS}
+        mem_bw_j = _bcast_col(mem_bw_bytes_per_s, n)
+        mac = _to_device(mac_rate_hz)
+        slot = _to_device(lambda_slot_energy_j)
+        xfers = _to_device(transfers_per_layer)
+        if frac is None:
+            out = _grid_kernel(bool(adaptive_gateways), False)(
+                cc, lc, nets_j, dev_j, mem_bw_j, mac, slot, xfers)
+        else:
+            out = _grid_kernel(bool(adaptive_gateways), True)(
+                cc, _to_device(frac), lc, nets_j, dev_j, mem_bw_j, mac, slot,
+                xfers)
+        if not as_numpy:
+            return out
+        return {k: np.asarray(v, np.float64) for k, v in out.items()}
 
 
 def evaluate_accelerator_batch(

@@ -91,7 +91,7 @@ from repro.core.sweep import (
 __all__ = [
     "FaultScenario", "FaultModel", "FabricUnusableError", "HEALTHY",
     "degrade_device_columns", "degraded_network_columns",
-    "faulted_columns_fn", "evaluate_degraded",
+    "FaultedColumns", "faulted_columns_fn", "evaluate_degraded",
     "AvailabilityReducer", "availability_search",
 ]
 
@@ -303,13 +303,32 @@ def degraded_network_columns(
     return out, dcols
 
 
-def faulted_columns_fn(scenario: FaultScenario, xp=np):
-    """A `columns_fn` hook for `sweep_chunked` / `pareto_search`: every
-    chunk is evaluated under `scenario` instead of the healthy fabric."""
-    def fn(cols, topo_id, topologies):
+@dataclasses.dataclass(frozen=True)
+class FaultedColumns:
+    """A scenario-carrying `columns_fn` hook for `sweep_chunked` /
+    `pareto_search`: every chunk is evaluated under `scenario` instead of
+    the healthy fabric.
+
+    The streaming engine recognizes the ``scenario`` attribute and composes
+    the degradation on-device — the six scenario fields become runtime
+    inputs of its universal chunk program, so faulted sweeps keep the
+    device-resident decode path and its prefetch pipeline.  Calling the
+    hook directly runs the numpy reference path
+    (`degraded_network_columns`), which is what legacy callers and the
+    device-vs-host parity tests use."""
+
+    scenario: FaultScenario
+    xp: object = np
+
+    def __call__(self, cols, topo_id, topologies):
         return degraded_network_columns(cols, topo_id, topologies,
-                                        scenario, xp)
-    return fn
+                                        self.scenario, self.xp)
+
+
+def faulted_columns_fn(scenario: FaultScenario, xp=np) -> FaultedColumns:
+    """Build the fault hook for `sweep_chunked` / `pareto_search` (see
+    `FaultedColumns`)."""
+    return FaultedColumns(scenario, xp)
 
 
 def evaluate_degraded(
@@ -394,13 +413,18 @@ def availability_search(
     epb_budget_j: float = 1e-9,
     min_availability: float = 0.9,
     chunk_size: int = 8192,
+    materialize: str = "auto",
+    prefetch: Optional[int] = None,
     **axes,
 ):
     """Chunked Monte-Carlo availability over a design grid: every chunk is
     evaluated under the (S, 1)-batched `scenarios`, and the reducer folds
     the scenario axis into per-point yield columns.  Peak memory is
-    O(S * chunk_size) regardless of grid size."""
+    O(S * chunk_size) regardless of grid size.  `materialize` / `prefetch`
+    pass through to `sweep_chunked` (device-resident decode + prefetch
+    pipeline by default)."""
     return sweep_chunked(
         traffic, AvailabilityReducer(epb_budget_j, min_availability),
         topologies=topologies, devices=devices, chunk_size=chunk_size,
-        columns_fn=faulted_columns_fn(scenarios), **axes)
+        columns_fn=faulted_columns_fn(scenarios),
+        materialize=materialize, prefetch=prefetch, **axes)

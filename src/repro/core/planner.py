@@ -30,7 +30,7 @@ import numpy as np
 __all__ = [
     "choose_subnetworks", "choose_subnetworks_arr",
     "plan_gateway_activation", "plan_gateway_activation_arr",
-    "plan_collective_channels",
+    "plan_collective_channels", "ceil_log2",
 ]
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -40,6 +40,26 @@ if TYPE_CHECKING:  # pragma: no cover
 def _asx(xp, v):
     """float64 on the numpy path, namespace default under jax tracing."""
     return np.asarray(v, np.float64) if xp is np else xp.asarray(v)
+
+
+def ceil_log2(v, xp=np):
+    """Exact elementwise ceil(log2(v)) for v > 0, with zero gradient.
+
+    XLA's `log2` is not correctly rounded at exact powers of two (e.g.
+    log2(16) can evaluate to 4.000000000000001 inside a fused program), so
+    `ceil(log2(v))` may overshoot by a whole stage precisely at the integral
+    points the topology kernels care about.  frexp is exact by construction:
+    v = m * 2**e with m in [0.5, 1), hence ceil(log2 v) = e, except at exact
+    powers of two where m == 0.5 and ceil(log2 v) = e - 1.  The traced path
+    wraps the input in stop_gradient — the result is piecewise constant, so
+    its gradient is zero exactly like ceil(log2(.)) would give.
+    """
+    if xp is np:
+        m, e = np.frexp(np.asarray(v, np.float64))
+    else:
+        import jax  # runtime import: the numpy path must stay jax-free
+        m, e = xp.frexp(jax.lax.stop_gradient(xp.asarray(v)))
+    return _asx(xp, xp.where(m == 0.5, e - 1, e))
 
 
 def choose_subnetworks_arr(n_lambda, modulation_rate_bps, n_mem_chiplets,
@@ -66,7 +86,7 @@ def choose_subnetworks_arr(n_lambda, modulation_rate_bps, n_mem_chiplets,
     if round_mode == "paper":
         k_pow2 = 2.0 ** xp.round(xp.log2(k))
     elif round_mode == "cover":
-        k_pow2 = 2.0 ** xp.ceil(xp.log2(k))
+        k_pow2 = 2.0 ** ceil_log2(k, xp)
     else:
         raise ValueError(
             f"round_mode must be 'paper' or 'cover', got {round_mode!r}")

@@ -24,8 +24,26 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from jax.experimental import enable_x64 as _enable_x64
+
 from repro.core.devices import DeviceLibrary, DEFAULT_DEVICES, laser_electrical_power_w
 from repro.core.topology import NetworkModel
+
+
+def engine_x64():
+    """Context manager forcing float64 tracing AND execution for the
+    analytical engine's jitted programs, regardless of the session-wide
+    ``jax_enable_x64`` setting.
+
+    The streaming sweep/search engine promises bit-identical folds across
+    execution modes (host-materialized vs device-decoded, serial vs
+    pipelined, monolithic vs chunked).  That promise only holds if every
+    engine program is traced and executed at one fixed precision: float32
+    would additionally put discrete planner decisions (TRINE's K*, stage
+    counts) one rounding error away from flipping between grid rows.  The
+    flag is thread-local, so pipeline worker threads must enter their own
+    context — `core.sweep` does this at every fold/enqueue site."""
+    return _enable_x64()
 
 # metric columns `eval_network_math` emits == NetworkReport fields — the
 # network-side metric vocabulary.  `core.sweep.METRIC_FIELDS` aliases this,
@@ -128,6 +146,17 @@ def eval_network_math(nets: Dict[str, jax.Array], dev: Dict[str, jax.Array],
         "laser_power_w": jnp.where(is_el, 0.0, laser_p),
         "trimming_power_w": jnp.where(is_el, 0.0, trimming_p),
     }
+
+
+def broadcast_metrics(out: Dict[str, jax.Array], xp=jnp) -> Dict[str, jax.Array]:
+    """Broadcast every metric column to the common (traffic x scenario x
+    config) result shape.  `eval_network_math` leaves each metric at its
+    natural broadcast shape (a workload-independent column stays (N,)); the
+    streaming engine needs uniform shapes so padded lanes slice off with one
+    ``[..., :valid]`` — this helper is shared by the traced chunk program and
+    the host-side `core.sweep.evaluate_columns` so both pad identically."""
+    shape = np.broadcast_shapes(*(np.shape(v) for v in out.values()))
+    return {k: xp.broadcast_to(v, shape) for k, v in out.items()}
 
 
 def evaluate_network(

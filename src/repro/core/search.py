@@ -70,7 +70,13 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.power import EVAL_DEVICE_FIELDS, Traffic, eval_network_math
+from repro.env import prefetch_depth
+from repro.core.power import (
+    EVAL_DEVICE_FIELDS,
+    Traffic,
+    engine_x64,
+    eval_network_math,
+)
 from repro.core.topology import MODEL_FIELDS, TOPOLOGY_ARRAYS
 from repro.core.sweep import (
     DEFAULT_TOPOLOGIES,
@@ -81,7 +87,11 @@ from repro.core.sweep import (
     SweepChunk,
     SweepResult,
     _as_f64,
+    _decode_program,
+    _nets_program,
     _network_columns_arrays,
+    _run_pipeline,
+    _validate_grid_values,
     grid_spec,
     sweep_chunked,
 )
@@ -387,6 +397,8 @@ def pareto_search(
     objectives: Sequence[str] = OBJECTIVES,
     shard: bool = False,
     columns_fn=None,
+    materialize: str = "auto",
+    prefetch: Optional[int] = None,
     **axes: Sequence[float],
 ):
     """Streaming per-workload Pareto front over a network configuration grid:
@@ -397,11 +409,15 @@ def pareto_search(
     `columns_fn` passes through to `sweep_chunked` — with
     `core.faults.faulted_columns_fn(scenario)` the result is the *survivable*
     frontier: the Pareto front of the grid as it performs under the fault
-    scenario rather than healthy."""
+    scenario rather than healthy.  `materialize` / `prefetch` likewise pass
+    through (device-resident decode + prefetch pipeline by default); front
+    merges happen in chunk order, so every mode/depth yields the identical
+    front."""
     return sweep_chunked(
         traffic, ParetoReducer(objectives), topologies=topologies,
         devices=devices, active_fraction=active_fraction,
-        chunk_size=chunk_size, shard=shard, columns_fn=columns_fn, **axes)
+        chunk_size=chunk_size, shard=shard, columns_fn=columns_fn,
+        materialize=materialize, prefetch=prefetch, **axes)
 
 
 # --------------------------------------------------------------------------
@@ -423,6 +439,8 @@ def codesign_pareto(
     lambda_slot_energy_j: float = 30e-15,
     adaptive_gateways: bool = True,
     transfers_per_layer: int = 16,
+    materialize: str = "auto",
+    prefetch: Optional[int] = None,
     **axes: Sequence[float],
 ) -> Tuple[ParetoFront, GridSpec]:
     """Joint (network-grid x chiplet-mix) Pareto search for one workload.
@@ -434,8 +452,21 @@ def codesign_pareto(
     ``mix_id * spec.n + grid_row`` — decode with `codesign_config_at`.
     Memory is O(len(mixes) * chunk_size * n_layers), independent of grid
     size.
+
+    Chunk columns and network fields stay device-resident end to end by
+    default (``materialize="device"``: the jitted mixed-radix decode + the
+    traced network-column builder + the accelerator kernel, no per-chunk
+    host numpy); ``materialize="host"`` is the serial reference layout
+    (`GridSpec.chunk_cols` on the host, shipped to the device).  Both modes
+    route through the SAME traced network-column program, so their fronts
+    are bit-identical.  `prefetch` chunks (default: REPRO_PREFETCH, 2) run
+    ahead of the front merge; merges happen in chunk order, so every depth
+    yields the identical front.
     """
-    from repro.core.accelerator import evaluate_accelerator_grid
+    from repro.core.accelerator import (
+        chiplet_mix_columns,
+        evaluate_accelerator_grid,
+    )
 
     objectives = tuple(objectives)
     if not mixes:
@@ -446,33 +477,68 @@ def codesign_pareto(
         raise ValueError(
             "empty grid: every swept axis (and `topologies`) needs at "
             "least one value")
+    _validate_grid_values(spec)
+    chiplet_mix_columns(mixes)  # eager validation (tasks run on a worker)
+    if materialize not in ("auto", "host", "device"):
+        raise ValueError(f"materialize must be 'auto', 'host', or 'device', "
+                         f"got {materialize!r}")
+    if materialize == "auto":
+        materialize = "device"
+    depth = prefetch_depth() if prefetch is None else max(0, int(prefetch))
+
     n_mix = len(mixes)
-    front: Optional[ParetoFront] = None
     mix_off = np.arange(n_mix, dtype=np.int64)[:, None] * n
     step = int(min(max(1, chunk_size), n))
-    for start in range(0, n, step):
+    nets_prog = _nets_program(spec.topologies)
+    decode = _decode_program(spec, step) if materialize == "device" else None
+    if decode is not None:
+        with engine_x64():
+            tables_j = {k: _as_f64(v) for k, v in spec.axes.items()}
+            base_j = {k: _as_f64(v) for k, v in spec.base.items()}
+
+    def make_task(start):
         stop = min(start + step, n)
-        cols, topo_id = spec.chunk_cols(start, stop)
-        pad = step - (stop - start)
-        if pad:  # repeat the last row so the kernel compiles once (as in
-            # sweep_chunked); padded lanes are sliced off below
-            cols = {k: np.concatenate([v, np.repeat(v[-1:], pad)])
-                    for k, v in cols.items()}
-            topo_id = np.concatenate([topo_id, np.repeat(topo_id[-1:], pad)])
-        nets = _network_columns_arrays(cols, topo_id, spec.topologies)
-        mem_bw = cols["n_mem_chiplets"] * cols["mem_bw_bytes_per_s"]
-        out = evaluate_accelerator_grid(
-            wl, mixes, nets, cols, mem_bw,
-            mac_rate_hz=mac_rate_hz,
-            lambda_slot_energy_j=lambda_slot_energy_j,
-            adaptive_gateways=adaptive_gateways,
-            transfers_per_layer=transfers_per_layer)
+
+        def task():
+            with engine_x64():
+                if decode is not None:
+                    cols, topo_id = decode(tables_j, base_j, np.int64(start))
+                else:
+                    cols, topo_id = spec.chunk_cols(start, stop)
+                    pad = step - (stop - start)
+                    if pad:  # repeat the last row so the kernel compiles
+                        # once; padded lanes are sliced off at the fold
+                        cols = {k: np.concatenate([v, np.repeat(v[-1:], pad)])
+                                for k, v in cols.items()}
+                        topo_id = np.concatenate(
+                            [topo_id, np.repeat(topo_id[-1:], pad)])
+                    cols = {k: _as_f64(v) for k, v in cols.items()}
+                    topo_id = jnp.asarray(topo_id)
+                nets, mem_bw = nets_prog(cols, topo_id)
+                out = evaluate_accelerator_grid(
+                    wl, mixes, nets, cols, mem_bw,
+                    mac_rate_hz=mac_rate_hz,
+                    lambda_slot_energy_j=lambda_slot_energy_j,
+                    adaptive_gateways=adaptive_gateways,
+                    transfers_per_layer=transfers_per_layer,
+                    as_numpy=False)
+                return start, stop, out
+        return task
+
+    front: Optional[ParetoFront] = None
+
+    def fold(result):
+        nonlocal front
+        start, stop, out = result
+        jax.block_until_ready(out)
         valid = stop - start
         pts = np.stack(
             [np.asarray(out[k], np.float64)[:, :valid] for k in objectives],
             axis=-1).reshape(n_mix * valid, len(objectives))
         idx = (mix_off + np.arange(start, stop)[None, :]).reshape(-1)
         front = _merge_into(front, pts, idx, objectives)
+
+    _run_pipeline(range(0, n, step), make_task, fold, depth)
     assert front is not None  # n > 0 and n_mix > 0 guarantee >= 1 chunk
     return front, spec
 

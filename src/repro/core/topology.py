@@ -43,7 +43,7 @@ from typing import Callable, Dict, Mapping, Optional
 import numpy as np
 
 from repro.core.devices import DeviceLibrary, DEFAULT_DEVICES, device_columns
-from repro.core.planner import choose_subnetworks_arr
+from repro.core.planner import ceil_log2, choose_subnetworks_arr
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,7 +195,8 @@ def tree_network_arrays(c: ColumnMap, xp=np) -> Dict[str, np.ndarray]:
     tree of broadband MZIs.  Stage count ceil(log2 G) (=5 for 32 gateways, as
     the paper states); memory BW restricted to ONE waveguide's bandwidth."""
     g = c["n_gateways"]
-    stages = xp.ceil(xp.log2(g))
+    # exact stage count: XLA's ceil(log2(.)) can overshoot at powers of two
+    stages = ceil_log2(g, xp)
     prop = (c["interposer_side_cm"] / 2) * c["wg.propagation_loss_db_per_cm"]
     loss = (stages * c["mzi.insertion_loss_db"] + prop
             + c["mr.drop_loss_db"] + c["mr.modulation_loss_db"])
@@ -228,7 +229,7 @@ def trine_network_arrays(c: ColumnMap, xp=np) -> Dict[str, np.ndarray]:
     k_over = _asx(xp, c.get("n_subnetworks", 0.0))
     k = xp.where(k_over > 0, k_over, k_auto)
     per = xp.maximum(1.0, xp.floor(g / k))
-    stages = xp.maximum(1.0, xp.ceil(xp.log2(per)))
+    stages = xp.maximum(1.0, ceil_log2(per, xp))
     prop = (c["interposer_side_cm"] / 3) * c["wg.propagation_loss_db_per_cm"]  # shorter subnet spans
     loss = (stages * c["mzi.insertion_loss_db"] + prop
             + c["mr.drop_loss_db"] + c["mr.modulation_loss_db"])

@@ -67,43 +67,65 @@ def photonic_mac(
     bk: int = DEFAULT_BK,
     interpret: bool = False,
 ) -> jax.Array:
-    """Quantized-weight matmul: out = x @ (w_q * per-tile scale)."""
+    """Quantized-weight matmul: out = x @ (w_q * per-tile scale).
+
+    Shapes need not be tile-aligned: non-multiples (vocab tails, odd hidden
+    dims) are zero-padded up to the (bm, bn, bk) grid and the result sliced
+    back — padded activation columns multiply padded zero weight rows, so
+    the f32 accumulator sees exact +0 contributions and aligned shapes are
+    bit-identical to the unpadded kernel.  `w_scale` is per weight-bank tile
+    on the ceil grid: shape (ceil(k/bk), ceil(n/bn)).
+    """
     m, k = x.shape
     k2, n = w_q.shape
     assert k == k2, (x.shape, w_q.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
-        f"shapes ({m},{k})x({k},{n}) must tile by ({bm},{bn},{bk})"
-    )
-    assert w_scale.shape == (k // bk, n // bn), w_scale.shape
-    n_k = k // bk
+    n_i = pl.cdiv(m, bm)
+    n_j = pl.cdiv(n, bn)
+    n_k = pl.cdiv(k, bk)
+    assert w_scale.shape == (n_k, n_j), (w_scale.shape, (n_k, n_j))
 
-    return pl.pallas_call(
+    mp, kp, np_ = n_i * bm, n_k * bk, n_j * bn
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w_q = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+
+    out = pl.pallas_call(
         functools.partial(_mac_kernel, n_k=n_k),
-        grid=(m // bm, n // bn, n_k),
+        grid=(n_i, n_j, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w_q, w_scale)
+    return out if (mp, np_) == (m, n) else out[:m, :n]
 
 
 def quantize_weights(
     w: jax.Array, bits: int = 8, bk: int = DEFAULT_BK, bn: int = DEFAULT_BN
 ):
     """Per-(bk x bn)-tile symmetric quantization — one scale per MR weight
-    bank, range set by the bank's own max |w| (the MR tuning range)."""
+    bank, range set by the bank's own max |w| (the MR tuning range).
+
+    Non-tile-aligned weights quantize on the zero-padded ceil grid (padding
+    is exact zero, so it never widens a bank's absmax range; all-padding
+    tiles fall back to the epsilon scale) and `w_q` is sliced back to (k, n).
+    `w_scale` comes back (ceil(k/bk), ceil(n/bn)) — exactly what
+    `photonic_mac` expects for the same (bk, bn)."""
     k, n = w.shape
-    assert k % bk == 0 and n % bn == 0, (w.shape, bk, bn)
-    tiles = w.reshape(k // bk, bk, n // bn, bn)
+    kp, np_ = -(-k // bk) * bk, -(-n // bn) * bn
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    tiles = w.reshape(kp // bk, bk, np_ // bn, bn)
     qmax = 2 ** (bits - 1) - 1
-    absmax = jnp.max(jnp.abs(tiles), axis=(1, 3))  # (k/bk, n/bn)
+    absmax = jnp.max(jnp.abs(tiles), axis=(1, 3))  # (ceil(k/bk), ceil(n/bn))
     scale = jnp.maximum(absmax, 1e-8) / qmax
     w_q = jnp.clip(
         jnp.round(tiles / scale[:, None, :, None]), -qmax, qmax
     ).astype(jnp.int8)
-    return w_q.reshape(k, n), scale.astype(jnp.float32)
+    return w_q.reshape(kp, np_)[:k, :n], scale.astype(jnp.float32)

@@ -9,16 +9,17 @@ import jax.numpy as jnp
 
 
 def photonic_mac_ref(x, w_q, w_scale, bk: int = 128, bn: int = 128):
-    """Dequantize-then-matmul oracle. w_q (K,N) int8, w_scale (K/bk, N/bn)."""
-    k, n = w_q.shape
-    scale_full = jnp.repeat(jnp.repeat(w_scale, bk, axis=0), bn, axis=1)
-    w = w_q.astype(jnp.float32) * scale_full
+    """Dequantize-then-matmul oracle. w_q (K,N) int8, w_scale on the ceil
+    tile grid (ceil(K/bk), ceil(N/bn)) — non-aligned shapes use the scale
+    grid's leading (K, N) window, mirroring the kernel's zero-pad+slice."""
+    w = dequantize_ref(w_q, w_scale, bk, bn)
     return jnp.dot(x.astype(jnp.float32), w, precision=jax.lax.Precision.HIGHEST)
 
 
 def dequantize_ref(w_q, w_scale, bk: int = 128, bn: int = 128):
+    k, n = w_q.shape
     scale_full = jnp.repeat(jnp.repeat(w_scale, bk, axis=0), bn, axis=1)
-    return w_q.astype(jnp.float32) * scale_full
+    return w_q.astype(jnp.float32) * scale_full[:k, :n]
 
 
 def attention_ref(q, k, v, *, causal=True, window=0, scale=None, q_offset=0):

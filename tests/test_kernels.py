@@ -46,6 +46,44 @@ def test_photonic_mac_block_shapes():
                                    rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.parametrize("m,k,n", [(100, 128, 128),    # ragged M only
+                                   (128, 200, 300),    # ragged K and N
+                                   (1, 128, 50257 % 512),  # vocab-tail-ish
+                                   (130, 129, 131)])   # every dim ragged
+def test_photonic_mac_non_aligned_shapes(m, k, n):
+    """Non-MXU-aligned shapes (vocab tails, odd hidden dims) run via the
+    kernel's zero-pad + slice and match the oracle on the valid window."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 7 + k * 3 + n))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    wq, sc = quantize_weights(w, bits=8)
+    assert wq.shape == (k, n)
+    assert sc.shape == (-(-k // 128), -(-n // 128))
+    out_k = photonic_mac(x, wq, sc, interpret=True)
+    out_r = ref.photonic_mac_ref(x, wq, sc)
+    assert out_k.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_photonic_mac_padding_is_exact_on_aligned_shapes():
+    """The pad+slice path must be a no-op for aligned shapes: quantizing a
+    weight matrix embedded in a larger zero-padded one yields identical
+    levels and scales, and the kernel output is bit-identical."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 256), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (128, 256), jnp.float32)
+    wq_a, sc_a = quantize_weights(w, bits=8)
+    wq_b, sc_b = quantize_weights(w[:200, :250], bits=8)
+    # zero padding never widens a bank's absmax: shared tiles agree exactly
+    np.testing.assert_array_equal(np.asarray(sc_b[:1, :1]),
+                                  np.asarray(sc_a[:1, :1]))
+    np.testing.assert_array_equal(np.asarray(wq_b[:128, :128]),
+                                  np.asarray(wq_a[:128, :128]))
+    out_a = photonic_mac(x, wq_a, sc_a, interpret=True)
+    out_b = photonic_mac(x[:100], wq_a, sc_a, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_b), np.asarray(out_a)[:100])
+
+
 @settings(max_examples=25, deadline=None)
 @given(bits=st.integers(min_value=2, max_value=8),
        seed=st.integers(min_value=0, max_value=2**31 - 1))

@@ -1,0 +1,255 @@
+"""Device-resident materialization + prefetch pipeline invariants.
+
+The streaming engine's contract (core/sweep.py docstring): the jitted
+mixed-radix decode reproduces the host chunk builder bit-for-bit, both
+materialization modes feed one program instance, and the prefetch pipeline
+folds in chunk order — so every (materialize, prefetch) combination produces
+bit-identical reducer states, monolithic results, Pareto fronts, and
+co-design fronts, including the repeat-last-row padded final chunk.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.env import prefetch_depth
+from repro.core.power import Traffic, engine_x64
+from repro.core.sweep import (
+    ChunkReducer,
+    MinReducer,
+    _as_f64,
+    _decode_program,
+    grid_spec,
+    sweep,
+    sweep_chunked,
+)
+from repro.core.search import codesign_pareto, pareto_search
+from repro.core.faults import HEALTHY, FaultModel, faulted_columns_fn
+from repro.core.accelerator import ChipletSpec
+from repro.core.workloads import CNN_WORKLOADS
+
+T = Traffic(bytes_read=2e9, bytes_written=1e9, n_transfers=128)
+# 5 topologies x 3 x 2 x 2 = 60 rows; chunk_size=7 leaves a 4-row padded tail
+AXES = dict(n_gateways=(16.0, 32.0, 64.0), n_lambda=(4.0, 8.0),
+            mem_bw_bytes_per_s=(50e9, 100e9))
+CHUNK = 7
+
+MODEL = FaultModel(p_lambda=0.05, p_bank=0.1, p_gateway=0.02, wpe_loss=0.1,
+                   drift_sigma_db=0.3, tuning_sigma=0.1)
+
+
+class _Collect(ChunkReducer):
+    """Concatenates every chunk's metrics — the reducer-state fingerprint."""
+
+    def init(self, spec):
+        return []
+
+    def step(self, carry, chunk):
+        carry.append({k: np.array(v) for k, v in chunk.metrics.items()})
+        return carry
+
+    def finish(self, carry, spec):
+        return {k: np.concatenate([c[k] for c in carry], axis=-1)
+                for k in carry[0]}
+
+
+def _assert_same(a, b, ctx):
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{ctx}: {k}")
+
+
+# ---------------------------------------------------------------------------
+# decode program vs host chunk builder
+# ---------------------------------------------------------------------------
+
+
+def test_device_decode_matches_chunk_cols_exactly():
+    spec = grid_spec(("tree", "trine", "elec"), **AXES)
+    decode = _decode_program(spec, CHUNK)
+    with engine_x64():
+        tables = {k: _as_f64(v) for k, v in spec.axes.items()}
+        base = {k: _as_f64(v) for k, v in spec.base.items()}
+        for start in range(0, spec.n, CHUNK):
+            stop = min(start + CHUNK, spec.n)
+            cols_d, topo_d = decode(tables, base, np.int64(start))
+            cols_h, topo_h = spec.chunk_cols(start, stop)
+            valid = stop - start
+            np.testing.assert_array_equal(
+                np.asarray(topo_d)[:valid], topo_h, err_msg=f"@{start}")
+            for k, v in cols_h.items():
+                np.testing.assert_array_equal(
+                    np.asarray(cols_d[k])[:valid], v, err_msg=f"{k}@{start}")
+            # padding clamps to the final row (repeat-last-row)
+            if valid < CHUNK:
+                for k in cols_h:
+                    assert np.all(np.asarray(cols_d[k])[valid:]
+                                  == cols_h[k][-1])
+
+
+# ---------------------------------------------------------------------------
+# network sweeps: modes x depths, padded tail included
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("materialize", ["device", "host"])
+@pytest.mark.parametrize("depth", [0, 1, 2])
+def test_network_sweep_bitwise_across_modes_and_depths(materialize, depth):
+    mono = sweep(T, **AXES)
+    out = sweep_chunked(T, _Collect(), chunk_size=CHUNK,
+                        materialize=materialize, prefetch=depth, **AXES)
+    _assert_same(out, mono.metrics, f"{materialize}/depth={depth}")
+
+    best = sweep_chunked(T, MinReducer("energy_j"), chunk_size=CHUNK,
+                         materialize=materialize, prefetch=depth, **AXES)
+    i, _ = mono.best("energy_j")
+    assert best["index"] == i
+    assert best["value"] == mono.metrics["energy_j"][i]
+
+
+def test_multi_workload_traffic_bitwise_across_depths():
+    traffics = [T, Traffic(bytes_read=5e8, bytes_written=5e8, n_transfers=32)]
+    ref = sweep_chunked(traffics, _Collect(), chunk_size=CHUNK, prefetch=0,
+                        **AXES)
+    assert ref["latency_s"].shape[0] == 2  # leading workload axis
+    for depth in (1, 2):
+        for mat in ("device", "host"):
+            out = sweep_chunked(traffics, _Collect(), chunk_size=CHUNK,
+                                materialize=mat, prefetch=depth, **AXES)
+            _assert_same(out, ref, f"{mat}/depth={depth}")
+
+
+def test_pareto_search_front_identical_across_modes_and_depths():
+    ref = pareto_search(T, chunk_size=CHUNK, materialize="host", prefetch=0,
+                        **AXES)
+    for depth in (0, 2):
+        for mat in ("device", "host"):
+            fr = pareto_search(T, chunk_size=CHUNK, materialize=mat,
+                               prefetch=depth, **AXES)
+            a, b = fr.canonical(), ref.canonical()
+            np.testing.assert_array_equal(a.points, b.points)
+            np.testing.assert_array_equal(a.indices, b.indices)
+
+
+# ---------------------------------------------------------------------------
+# faulted sweeps (scenario composes on-device)
+# ---------------------------------------------------------------------------
+
+
+def test_faulted_healthy_is_bitwise_plain_every_mode():
+    plain = sweep(T, **AXES)
+    for depth in (0, 2):
+        for mat in ("device", "host"):
+            out = sweep_chunked(T, _Collect(), chunk_size=CHUNK,
+                                columns_fn=faulted_columns_fn(HEALTHY),
+                                materialize=mat, prefetch=depth, **AXES)
+            _assert_same(out, plain.metrics, f"{mat}/depth={depth}")
+
+
+def test_faulted_batched_scenarios_bitwise_across_modes_and_depths():
+    scen = MODEL.sample(6, rng=7)
+    ref = None
+    for depth in (0, 1, 2):
+        for mat in ("device", "host"):
+            out = sweep_chunked(T, _Collect(), chunk_size=CHUNK,
+                                columns_fn=faulted_columns_fn(scen),
+                                materialize=mat, prefetch=depth, **AXES)
+            assert out["latency_s"].shape[0] == 6  # scenario axis survives
+            if ref is None:
+                ref = out
+            else:
+                _assert_same(out, ref, f"{mat}/depth={depth}")
+
+
+def test_legacy_columns_fn_still_runs_on_host_columns():
+    """An arbitrary callable (no .scenario) gets host-materialized columns
+    and its own pipeline, matching the numpy reference path at f64 rtol."""
+    scen = MODEL.expected()
+    hook = faulted_columns_fn(scen)
+    ref = sweep_chunked(T, _Collect(), chunk_size=CHUNK,
+                        columns_fn=hook, prefetch=0, **AXES)
+    seen = []
+
+    def legacy(cols, topo_id, topologies):
+        seen.append(int(topo_id.size))
+        return hook(cols, topo_id, topologies)
+
+    out = sweep_chunked(T, _Collect(), chunk_size=CHUNK, columns_fn=legacy,
+                        prefetch=2, **AXES)
+    assert seen and all(s == CHUNK for s in seen)  # host columns, padded
+    for k in ref:
+        np.testing.assert_allclose(out[k], ref[k], rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# co-design fronts
+# ---------------------------------------------------------------------------
+
+
+def test_codesign_front_identical_across_modes_and_depths():
+    wl = CNN_WORKLOADS["LeNet5"]()
+    mixes = [[ChipletSpec(512, 32)], [ChipletSpec(256, 9), ChipletSpec(128, 49)]]
+    kw = dict(topologies=("tree", "trine", "elec"), chunk_size=5,
+              n_gateways=(16.0, 32.0), n_lambda=(4.0, 8.0))
+    ref_front, ref_spec = codesign_pareto(wl, mixes, materialize="host",
+                                          prefetch=0, **kw)
+    ref = ref_front.canonical()
+    for depth in (0, 2):
+        for mat in ("device", "host"):
+            front, spec = codesign_pareto(wl, mixes, materialize=mat,
+                                          prefetch=depth, **kw)
+            assert spec.n == ref_spec.n
+            got = front.canonical()
+            np.testing.assert_array_equal(got.points, ref.points,
+                                          err_msg=f"{mat}/depth={depth}")
+            np.testing.assert_array_equal(got.indices, ref.indices,
+                                          err_msg=f"{mat}/depth={depth}")
+
+
+# ---------------------------------------------------------------------------
+# knobs and validation
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_depth_env_parsing(monkeypatch):
+    monkeypatch.delenv("REPRO_PREFETCH", raising=False)
+    assert prefetch_depth() == 2
+    monkeypatch.setenv("REPRO_PREFETCH", "0")
+    assert prefetch_depth() == 0
+    monkeypatch.setenv("REPRO_PREFETCH", "5")
+    assert prefetch_depth() == 5
+    monkeypatch.setenv("REPRO_PREFETCH", "-3")
+    assert prefetch_depth() == 0  # clamped
+    monkeypatch.setenv("REPRO_PREFETCH", "banana")
+    assert prefetch_depth() == 2  # unparseable -> default
+
+
+def test_repro_prefetch_env_changes_schedule_not_results(monkeypatch):
+    ref = sweep_chunked(T, _Collect(), chunk_size=CHUNK, prefetch=0, **AXES)
+    monkeypatch.setenv("REPRO_PREFETCH", "3")
+    out = sweep_chunked(T, _Collect(), chunk_size=CHUNK, **AXES)
+    _assert_same(out, ref, "env-depth")
+
+
+def test_bad_materialize_rejected():
+    with pytest.raises(ValueError, match="materialize"):
+        sweep_chunked(T, _Collect(), materialize="gpu", **AXES)
+
+
+def test_spacx_subcluster_gateways_rejected_eagerly():
+    with pytest.raises(ValueError):
+        sweep_chunked(T, _Collect(), topologies=("spacx",),
+                      n_gateways=(4.0,), n_lambda=(8.0,))
+    wl = CNN_WORKLOADS["LeNet5"]()
+    with pytest.raises(ValueError):
+        codesign_pareto(wl, [[ChipletSpec(256, 9)]], topologies=("spacx",),
+                        n_gateways=(4.0,), n_lambda=(8.0,))
+
+
+def test_engine_runs_float64_even_in_f32_session():
+    """The engine promises fixed f64 execution regardless of the session's
+    jax_enable_x64 — the foundation of all the bitwise guarantees above."""
+    assert jnp.asarray(1.0).dtype == jnp.float32  # test session is f32
+    out = sweep_chunked(T, _Collect(), chunk_size=CHUNK, **AXES)
+    assert out["energy_j"].dtype == np.float64
+    mono = sweep(T, **AXES)
+    assert mono.metrics["energy_j"].dtype == np.float64
