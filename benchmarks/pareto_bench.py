@@ -31,6 +31,16 @@ Four sections:
     (required check, verified against `pareto_mask_reference`); in full mode
     at least one seed must strictly improve (exempted in smoke, where the
     shortened descent may not escape an exactly-scored seed).
+  * trust-region refined front — the same seeds refined with
+    `method="trust_region"` (second-order log-space trust-region descent +
+    coordinate-wise integer line search, n_gateways added to the discrete
+    axes) jointly against a three-CNN workload batch (weighted-geomean EDP).
+    Two required checks in BOTH modes: the trust-region front must weakly
+    dominate the first-order refined front (merging unions the point sets,
+    so this holds by construction — the gate re-verifies with the O(n^2)
+    brute-force reference that the merge machinery lost nothing), and every
+    trust-region design's per-workload metrics must re-score bit-identically
+    through a standalone `evaluate_accelerator_grid` call.
 
 Acceptance bars (recorded in the artifact, asserted by the smoke tests and
 benchmarks/run.py): chunked evaluation throughput within 1.5x of the
@@ -58,6 +68,7 @@ from repro.core.search import (
     _front_of,
     codesign_config_at,
     codesign_pareto,
+    merge_fronts,
     pareto_front,
     pareto_mask_reference,
     pareto_search,
@@ -67,6 +78,7 @@ from repro.core.search import (
 from repro.core.sweep import (
     ChunkReducer,
     MinReducer,
+    _network_columns_arrays,
     build_grid,
     grid_spec,
     network_columns_device,
@@ -424,6 +436,58 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
         for p in cd_front.points])
     refined_dominates = bool(np.all(~seed_on_union | seed_present))
 
+    # ---- trust-region multi-workload refined front -----------------------
+    # refine the same top-3 seeds with the second-order engine, jointly
+    # against a three-CNN batch (scalarized as weighted-geomean EDP), with
+    # n_gateways added to the refined axes so the coordinate-wise integer
+    # line search walks a network axis as well as the chiplet counts; the
+    # front's points stay the FIRST workload's (ResNet18) exact metrics, so
+    # they are directly comparable with the first-order front
+    tr_workloads = [wl, CNN_WORKLOADS["MobileNetV2"](),
+                    CNN_WORKLOADS["EfficientNetB0"]()]
+    tr_axes = ("modulation_rate_bps", "mem_bw_bytes_per_s",
+               "interposer_side_cm", "mzi.insertion_loss_db", "n_gateways")
+    t0 = time.perf_counter()
+    rf_tr = refine_front(cd_front, spec, mixes, tr_workloads, top_k=3,
+                         method="trust_region", refine_axes=tr_axes,
+                         steps=6 if smoke else 32)
+    tr_front_s = time.perf_counter() - t0
+    # union the trust-region front with the first-order front: weak
+    # dominance over the first-order front then holds by construction, and
+    # the brute-force re-verification below confirms the merge machinery
+    # lost nothing (same pattern as the seed-front gate above)
+    tr_front = merge_fronts(rf_tr["front"], merged_front)
+    tr_union = np.concatenate([tr_front.points, merged_front.points])
+    fo_on_union = pareto_mask_reference(tr_union)[tr_front.size:]
+    fo_present = np.array([
+        bool((tr_front.points == p).all(-1).any())
+        for p in merged_front.points])
+    tr_dominates_fo = bool(np.all(~fo_on_union | fo_present))
+
+    # every trust-region design's per-workload metrics must re-score
+    # bit-identically through a standalone evaluate_accelerator_grid call
+    # on its reported integer config
+    def _rescore_exact(r) -> bool:
+        cfg = dict(r["refined"]["config"])
+        chips = cfg.pop("chiplets")
+        cfg.pop("mix")
+        topo = cfg.pop("topology")
+        mac = cfg.pop("mac_rate_hz")
+        slot = cfg.pop("lambda_slot_energy_j")
+        c1 = {k: np.full(1, v, np.float64)
+              for k, v in dict(spec.base, **cfg).items()}
+        n1 = _network_columns_arrays(c1, np.zeros(1, np.int64), (topo,))
+        mbw = c1["n_mem_chiplets"] * c1["mem_bw_bytes_per_s"]
+        for w, per in zip(tr_workloads, r["refined"]["per_workload"]):
+            o = evaluate_accelerator_grid(
+                w, [chips], n1, c1, mbw, mac_rate_hz=mac,
+                lambda_slot_energy_j=slot)
+            if any(float(o[k][0, 0]) != v for k, v in per.items()):
+                return False
+        return True
+
+    tr_rescore_exact = all(_rescore_exact(r) for r in rf_tr["results"])
+
     codesign = {
         "n_networks": n_net,
         "n_mixes": len(mixes),
@@ -460,6 +524,24 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
         "n_candidates": [r["n_candidates"] for r in rf["results"]],
     }
 
+    tr_best_gain = max(r["improvement"] for r in rf_tr["results"])
+    trust_region_front = {
+        "seeds_refined": len(rf_tr["results"]),
+        "workloads": rf_tr["results"][0]["workloads"],
+        "first_order_front_size": merged_front.size,
+        "trust_region_front_size": tr_front.size,
+        "n_improved": rf_tr["n_improved"],
+        "best_improvement": tr_best_gain,
+        "refine_front_s": tr_front_s,
+        "improvements": [r["improvement"] for r in rf_tr["results"]],
+        "tr_accepted": [r["tr_stats"]["accepted"]
+                        for r in rf_tr["results"]],
+        "tr_rejected": [r["tr_stats"]["rejected"]
+                        for r in rf_tr["results"]],
+        "line_search": [r["line_search"] for r in rf_tr["results"]],
+        "sensitivity": rf_tr["sensitivity"],
+    }
+
     checks = {
         "codesign_grid_at_least_1e6": n_joint >= 1_000_000,
         "net_front_streaming_equals_monolithic": bool(net_fronts_equal),
@@ -479,6 +561,8 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
         "refinement_improves": refine["improvement"] >= -1e-12,
         "refined_front_dominates_seed": refined_dominates,
         "refined_improves_a_seed": rf["n_improved"] >= 1,
+        "trust_region_front_dominates_first_order": tr_dominates_fo,
+        "trust_region_rescore_bit_identical": tr_rescore_exact,
     }
     # mode-dependent expectations (the grid sizes, timing bars that a tiny
     # CI grid cannot amortize, and whether a handful of smoke-length descent
@@ -502,6 +586,7 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
                    ("start_value", "refined_value", "improvement",
                     "refine_axes", "refined")},
         "refined_front": refined_front,
+        "trust_region_front": trust_region_front,
         "checks": checks,
         "required_checks": required,
         "pass": all(checks[k] for k in required),
@@ -538,6 +623,12 @@ def run(csv: bool = True, smoke: bool = None) -> dict:
               f"{refined_front['n_improved']} improved "
               f"(best {100 * best_gain:.1f}%), front "
               f"{cd_front.size} -> {merged_front.size}")
+        print(f"pareto/trust_region_front,{tr_front_s * 1e6:.0f},"
+              f"{trust_region_front['seeds_refined']} seeds x "
+              f"{len(trust_region_front['workloads'])} workloads, "
+              f"{trust_region_front['n_improved']} improved "
+              f"(best {100 * tr_best_gain:.1f}%), front "
+              f"{merged_front.size} -> {tr_front.size}")
         for k, v in checks.items():
             flag = "PASS" if v else (
                 "FAIL" if k in required else "SKIP(smoke)")

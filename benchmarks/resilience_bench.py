@@ -38,7 +38,6 @@ import numpy as np
 
 from repro.core import (
     FaultModel,
-    FaultScenario,
     HEALTHY,
     Traffic,
     availability_search,

@@ -29,6 +29,7 @@ from benchmarks import roofline            # §Roofline report
 from benchmarks import fabric_whatif       # frontier fabrics -> step time
 from benchmarks import resilience_bench    # fault model / survivability
 from benchmarks import photonic_mac_bench  # kernel microbench
+from tools import lint                     # static-analysis gate
 
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
 
@@ -67,11 +68,19 @@ def build_summary(results: dict) -> dict:
       * sweep_bench:  batched configs/sec >= bar x scalar
       * pareto_bench: chunked evaluation within bar x of monolithic (both
         the network grid and the co-design grid), fronts exactly equal
-        between streaming and monolithic paths, and the refined co-design
-        front weakly dominating its seed front (required in both modes);
-        the strict "refined_improves_a_seed" gate is required in full mode
-        and honestly exempted (computed + flagged, never rewritten) in
-        smoke via each benchmark's `required_checks` list.
+        between streaming and monolithic paths, the refined co-design
+        front weakly dominating its seed front, the trust-region
+        multi-workload front weakly dominating the first-order front, and
+        every trust-region design re-scoring bit-identically (all required
+        in both modes); the strict "refined_improves_a_seed" gate is
+        required in full mode and honestly exempted (computed + flagged,
+        never rewritten) in smoke via each benchmark's `required_checks`
+        list.
+      * lint: byte-compilation and import hygiene over src/benchmarks/
+        examples/tools (tools/lint.py) — required in both modes.
+
+    Also records a "refinement" block: best improvement / fronts moved by
+    the first-order and trust-region engines, for perf-trajectory reads.
     """
     checks = {}
     for name, res in results.items():
@@ -117,9 +126,34 @@ def build_summary(results: dict) -> dict:
                          >= pipe["speedup_bar"]),
             }
 
+    # refinement record: how far each descent engine moved the co-design
+    # frontier (pareto_bench gates the dominance + bit-identity contracts;
+    # this block is the summary-level trajectory a regression hunt reads)
+    refinement = None
+    if pareto_res:
+        fo = pareto_res.get("refined_front") or {}
+        tr = pareto_res.get("trust_region_front") or {}
+        refinement = {
+            "first_order": {
+                "best_improvement": fo.get("best_improvement"),
+                "n_improved": fo.get("n_improved"),
+                "merged_front_size": fo.get("merged_front_size"),
+            },
+            "trust_region": {
+                "best_improvement": tr.get("best_improvement"),
+                "n_improved": tr.get("n_improved"),
+                "front_size": tr.get("trust_region_front_size"),
+                "workloads": tr.get("workloads"),
+                "line_search": tr.get("line_search"),
+            },
+            "trust_region_dominates_first_order": bool(
+                (pareto_res.get("checks") or {}).get(
+                    "trust_region_front_dominates_first_order")),
+        }
+
     ok = all(checks.values()) and all(p["pass"] for p in perf.values())
-    return {"checks": checks, "perf": perf, "pass": ok,
-            "benchmarks": results}
+    return {"checks": checks, "perf": perf, "refinement": refinement,
+            "pass": ok, "benchmarks": results}
 
 
 def write_summary(results: dict) -> dict:
@@ -191,6 +225,22 @@ def main() -> None:
     results["fabric_whatif"] = fabric_whatif.run()
     print("# resilience: fault degradation curves + Monte-Carlo availability")
     results["resilience"] = resilience_bench.run()
+    print("# static-analysis gate (tools/lint.py)")
+    lint_res = lint.run()
+    results["lint"] = {
+        "engine": lint_res["engine"],
+        "n_files": lint_res["n_files"],
+        "n_findings": len(lint_res["findings"]),
+        "findings": lint_res["findings"][:50],
+        "checks": {
+            "compile_ok": lint_res["compile_ok"],
+            "no_lint_findings": not lint_res["findings"],
+        },
+    }
+    print(f"lint/static_analysis,0,engine={lint_res['engine']} "
+          f"files={lint_res['n_files']} "
+          f"findings={len(lint_res['findings'])} "
+          f"{'PASS' if lint_res['ok'] else 'FAIL'}")
 
     summary = write_summary(results)
     bench9 = write_bench9(results)

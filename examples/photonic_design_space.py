@@ -15,7 +15,10 @@ best frontier point through the continuous columns, and joint accelerator +
 network refinement of the co-design frontier (`refine_codesign`: relaxed
 descent over per-chiplet n_units/vector_size, mac_rate_hz and
 lambda_slot_energy_j alongside the network axes, snapped back to feasible
-integer designs and round-tripped into a `core.fabric.Fabric`).
+integer designs and round-tripped into a `core.fabric.Fabric`), and a
+six-CNN joint trust-region refinement (`refine_trust_region`: second-order
+descent + coordinate-wise integer line search against the weighted-geomean
+EDP of all six paper CNNs at once).
 
   PYTHONPATH=src python examples/photonic_design_space.py
   REPRO_SMOKE=1 PYTHONPATH=src python examples/photonic_design_space.py  # tiny grids
@@ -232,6 +235,46 @@ def codesign_refine(front, spec, mixes):
           f"link latency {fb.link_latency_s * 1e9:.0f} ns")
 
 
+def codesign_refine_six_cnn(front, spec, mixes):
+    """Trust-region multi-workload refinement: one design, all six CNNs.
+
+    The second-order engine (`refine_trust_region`) refines the best-EDP
+    frontier seed against the weighted-geomean EDP of ALL six paper CNNs at
+    once — log-space trust-region descent on the relaxed objective, then a
+    coordinate-wise integer line search over the discrete axes (per-chiplet
+    n_units/vector_size and n_gateways) — so the refined interposer serves
+    the whole workload portfolio instead of overfitting one network.  The
+    final integer design round-trips into a `core.fabric.Fabric`."""
+    print("=" * 72)
+    from repro.core.fabric import Fabric
+    from repro.core.search import refine_trust_region
+
+    wls = [CNN_WORKLOADS[n]() for n in
+           ("DenseNet121", "ResNet18", "LeNet5", "VGG16", "MobileNetV2",
+            "EfficientNetB0")]
+    edp = front.points[:, 0] * front.points[:, 1]
+    seed = int(front.indices[int(np.argmin(edp))])
+    r = refine_trust_region(
+        spec, mixes, wls, seed, steps=4 if SMOKE else 24,
+        refine_axes=("modulation_rate_bps", "mem_bw_bytes_per_s",
+                     "interposer_side_cm", "n_gateways"))
+    names = "+".join(w.name for w in wls)
+    print(f"Six-CNN joint refinement ({names}):")
+    print(f"  geomean EDP {r['seed']['value']:.3e} -> "
+          f"{r['refined']['value']:.3e} "
+          f"({100 * r['improvement']:.1f}% better), trust region "
+          f"{r['tr_stats']['accepted']} accepted / "
+          f"{r['tr_stats']['rejected']} rejected steps, line search scored "
+          f"{r['line_search']['n_scored']} integer designs")
+    for w, m in zip(wls, r["refined"]["per_workload"]):
+        print(f"    {w.name:16s} latency {m['latency_s']:.3e} s, "
+              f"energy {m['energy_j']:.3e} J")
+    fb = Fabric.from_config(r["refined"]["config"], name="six-cnn-best")
+    print(f"  six-CNN best as Fabric: cross-pod "
+          f"{fb.cross_pod_bw_bytes_per_s / 1e9:.1f} GB/s, "
+          f"link latency {fb.link_latency_s * 1e9:.0f} ns")
+
+
 def fabric_whatif(front, spec, mixes):
     """Frontier -> Fabric link models -> Layer-B roofline what-if: price one
     LLM serving cell (yi_34b decode) under the metallic ICI baseline and
@@ -266,4 +309,5 @@ if __name__ == "__main__":
     pareto_and_refine()
     front, spec, mixes = codesign_search()
     codesign_refine(front, spec, mixes)
+    codesign_refine_six_cnn(front, spec, mixes)
     fabric_whatif(front, spec, mixes)

@@ -14,7 +14,6 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import jax.numpy as jnp
 
 from repro.core import (
     CNN_WORKLOADS, NetworkParams, choose_subnetworks, crosslight_25d_siph,

@@ -62,8 +62,6 @@ def main():
     else:
         out = make().run(args.steps)
     print("done:", out)
-    first = None
-    import json
     print("loss trajectory proves optimization:",)
 
 

@@ -46,7 +46,16 @@ refines frontiers:
                              re-score every candidate through the grid
                              kernel, so the reported point is always a
                              feasible integer design, never worse than its
-                             seed.
+                             seed.  Accepts one Workload or a weighted batch
+                             (scalarized as the weighted geomean of the
+                             per-workload objective) and two descent
+                             methods: "first_order" (fixed-lr projected
+                             gradient + one-shot floor/ceil snap) and
+                             "trust_region" (second-order log-space
+                             trust-region descent + coordinate-wise integer
+                             line search to a local integer optimum).
+  refine_trust_region(...)   `refine_codesign(method="trust_region")`: the
+                             second-order multi-workload engine in one call.
   refine_front(...)          frontier-wide driver: refine every (or top-k)
                              row, merge the refined points back with
                              merge_fronts (the result weakly dominates the
@@ -102,7 +111,8 @@ __all__ = [
     "merge_fronts", "pareto_front", "ParetoReducer", "pareto_search",
     "codesign_pareto", "codesign_config_at", "frontier_configs",
     "refine_continuous", "refine_front_point", "DEFAULT_REFINE_AXES",
-    "refine_codesign", "refine_front", "ACCEL_REFINE_AXES",
+    "refine_codesign", "refine_trust_region", "refine_front",
+    "ACCEL_REFINE_AXES",
 ]
 
 # the paper's three reported quantities, all minimized
@@ -618,6 +628,168 @@ def _projected_descent(value_and_grad, theta0, lo, hi, steps: int,
     return best_loss, best_theta, trace, grad0
 
 
+def _tr_step(hess: np.ndarray, grad: np.ndarray, radius: float,
+             damping: float = 1e-6) -> np.ndarray:
+    """Approximately solve the trust-region subproblem
+    min_s g.s + 0.5 s.H.s  s.t.  |s| <= radius  by Levenberg damping:
+    symmetrize H, eigendecompose, lift the spectrum so the smallest
+    eigenvalue is at least `damping` (negative curvature becomes a
+    steepest-descent-like direction instead of a runaway), then escalate
+    the ridge until the damped Newton step fits inside the radius.  Any
+    non-finite curvature falls back to the radius-length steepest-descent
+    step, so the caller always gets a usable direction."""
+    g = np.asarray(grad, np.float64)
+
+    def _cauchy():
+        n = float(np.linalg.norm(g))
+        return -g * (radius / n) if n > 0 else np.zeros_like(g)
+
+    H = np.asarray(hess, np.float64)
+    H = 0.5 * (H + H.T)
+    if not np.all(np.isfinite(H)):
+        return _cauchy()
+    w, V = np.linalg.eigh(H)
+    lam = max(0.0, damping - float(w.min()))
+    gp = V.T @ g
+    s = np.zeros_like(g)
+    for _ in range(64):
+        s = -(V @ (gp / (w + lam)))
+        norm = float(np.linalg.norm(s))
+        if not np.isfinite(norm):
+            return _cauchy()
+        if norm <= radius:
+            break
+        lam = 2.0 * lam + damping
+    norm = float(np.linalg.norm(s))
+    if not np.isfinite(norm) or norm == 0.0:
+        return _cauchy()
+    if norm > radius:
+        s *= radius / norm
+    return s
+
+
+def _trust_region_descent(value_and_grad, hess_fn, theta0, lo, hi,
+                          steps: int, radius: float = 0.5,
+                          min_radius: float = 1e-5,
+                          max_radius: float = 4.0,
+                          accept_ratio: float = 1e-4,
+                          damping: float = 1e-6):
+    """Box-constrained trust-region descent — the second-order alternative
+    to `_projected_descent`, shared by `refine_codesign(method=
+    "trust_region")` and directly unit-testable with plain-python callables.
+
+    Each iteration builds the local quadratic model from the exact gradient
+    and Hessian of the objective (`hess_fn`), solves the subproblem via
+    `_tr_step`, clips the candidate into the [lo, hi] box, and
+    accepts/rejects on an exact re-evaluation at the clipped candidate:
+    rho = actual_decrease / model_decrease.  Accepted steps with good model
+    agreement while pinned at the radius grow the radius (x2, capped at
+    `max_radius`); rejected or badly-modelled steps shrink it (x0.25); the
+    loop stops early once the radius collapses below `min_radius` or the
+    box pins the iterate.  The best iterate ever visited is returned, so
+    the result is never worse than theta0.
+
+    Everything runs host-side in float64; `value_and_grad`/`hess_fn` may be
+    jitted jax callables or plain functions.  Returns (best_loss,
+    best_theta, trace, grad0, stats): `trace` is the accepted-iterate loss
+    history (trace[0] is the seed loss), `grad0` the float64 gradient at
+    theta0, and `stats` counts accepts/rejects and records the
+    per-iteration radius trajectory (an entry AFTER each update — a
+    rejected step shows a strictly smaller radius than its predecessor)."""
+    theta = np.clip(np.asarray(theta0, np.float64),
+                    np.asarray(lo, np.float64), np.asarray(hi, np.float64))
+    lo = np.asarray(lo, np.float64)
+    hi = np.asarray(hi, np.float64)
+    v, g = value_and_grad(theta)
+    f = float(v)
+    g = np.asarray(g, np.float64)
+    grad0 = g.copy()
+    best_loss, best_theta = f, theta.copy()
+    trace: List[float] = [f]
+    stats: Dict[str, object] = {
+        "accepted": 0, "rejected": 0, "radius_trace": [],
+        "stopped_early": False}
+    radius = float(radius)
+    for _ in range(int(steps)):
+        H = np.asarray(hess_fn(theta), np.float64)
+        s = _tr_step(H, g, radius, damping)
+        cand = np.clip(theta + s, lo, hi)
+        s_eff = cand - theta
+        if not np.any(s_eff):
+            stats["stopped_early"] = True
+            break  # pinned against the box: no admissible move left
+        pred = -(float(g @ s_eff) + 0.5 * float(s_eff @ H @ s_eff))
+        v_new, g_new = value_and_grad(cand)
+        f_new = float(v_new)
+        actual = f - f_new
+        if pred > 0:
+            rho = actual / pred
+        else:  # model predicts no decrease: trust the exact re-score alone
+            rho = np.inf if actual > 0 else -np.inf
+        if np.isfinite(f_new) and actual > 0 and rho >= accept_ratio:
+            theta, f = cand, f_new
+            g = np.asarray(g_new, np.float64)
+            trace.append(f)
+            stats["accepted"] = int(stats["accepted"]) + 1
+            if f < best_loss:
+                best_loss, best_theta = f, theta.copy()
+            if rho > 0.75 and float(np.linalg.norm(s_eff)) >= 0.8 * radius:
+                radius = min(2.0 * radius, max_radius)
+        else:
+            stats["rejected"] = int(stats["rejected"]) + 1
+            radius *= 0.25
+        stats["radius_trace"].append(radius)
+        if radius < min_radius:
+            stats["stopped_early"] = True
+            break
+    stats["final_radius"] = radius
+    return best_loss, best_theta, trace, grad0, stats
+
+
+def _coordinate_int_search(x0: Mapping, lo: Mapping, hi: Mapping, score,
+                           max_sweeps: int = 4, max_steps: int = 64):
+    """Coordinate-wise integer line search: walk each discrete axis in ±1
+    integer steps holding the others fixed, keeping every strictly
+    improving move and continuing in the improving direction; sweep the
+    axes round-robin until one full sweep makes no move (a local integer
+    optimum) or `max_sweeps` is exhausted.  `score(values) -> float` must
+    return +inf (or raise nothing) for infeasible candidates; scores are
+    memoized so a design is never re-scored.  Seeded at `x0` (assumed
+    feasible — e.g. the floor/ceil snap winner), so the result is never
+    worse than its seed.  Returns (best_values, best_score, stats)."""
+    cur = {k: int(v) for k, v in x0.items()}
+    keys = list(cur)
+    cache: Dict[Tuple[int, ...], float] = {}
+
+    def _scored(vals: Mapping) -> float:
+        key = tuple(int(vals[k]) for k in keys)
+        if key not in cache:
+            cache[key] = float(score(vals))
+        return cache[key]
+
+    cur_v = _scored(cur)
+    sweeps = 0
+    for _ in range(int(max_sweeps)):
+        sweeps += 1
+        moved = False
+        for k in keys:
+            for d in (+1, -1):
+                for _step in range(int(max_steps)):
+                    cand = dict(cur)
+                    cand[k] = cur[k] + d
+                    if not (int(lo[k]) <= cand[k] <= int(hi[k])):
+                        break
+                    v = _scored(cand)
+                    if v < cur_v:
+                        cur, cur_v = cand, v
+                        moved = True
+                    else:
+                        break
+        if not moved:
+            break
+    return cur, cur_v, {"n_scored": len(cache), "n_sweeps": sweeps}
+
+
 def refine_continuous(
     topology: str,
     overrides: Mapping[str, float],
@@ -701,12 +873,28 @@ def refine_continuous(
         value_and_grad, theta0, lo, hi, steps, lr)
 
     # projection happens in (possibly float32) log-space; snap the reported
-    # values back inside the exact float64 box
+    # values back inside the exact float64 box, then re-evaluate the
+    # metrics AT the clipped point — the reported metrics must describe the
+    # reported design (they used to be evaluated at the pre-clip iterate,
+    # so they diverged whenever the box projection was active)
+    lo_box = np.asarray([bounds[nm][0] for nm in names], np.float64)
+    hi_box = np.asarray([bounds[nm][1] for nm in names], np.float64)
     x_best = np.clip(np.exp(np.asarray(best_theta, np.float64)),
-                     [bounds[nm][0] for nm in names],
-                     [bounds[nm][1] for nm in names])
+                     lo_box, hi_box)
     metrics = {k: float(v)
-               for k, v in metrics_jit(best_theta).items()}
+               for k, v in metrics_jit(jnp.log(_as_f64(x_best))).items()}
+    if objective == "edp":
+        best_loss = float(np.log(metrics["energy_j"])
+                          + np.log(metrics["latency_s"]))
+    else:
+        best_loss = float(np.log(metrics[objective]))
+    if best_loss > trace[0]:
+        # clipping moved the iterate enough to undo the descent gain: fall
+        # back to the seed point, keeping refined_value <= start_value
+        x_best = np.clip(np.exp(np.asarray(theta0, np.float64)),
+                         lo_box, hi_box)
+        metrics = {k: float(v) for k, v in metrics_jit(theta0).items()}
+        best_loss = trace[0]
     return {
         "topology": topology,
         "objective": objective,
@@ -766,15 +954,54 @@ def _int_neighbors(v: float, extra: Optional[float] = None,
     return sorted(o for o in opts if o >= lo) or [lo]
 
 
+def _as_workload_batch(wl, weights) -> Tuple[List[Workload], np.ndarray]:
+    """Normalize the `wl` argument of the refiners: one `Workload` or a
+    sequence of them, with optional positive per-workload weights
+    (normalized to sum 1; uniform when omitted)."""
+    wls = [wl] if isinstance(wl, Workload) else list(wl)
+    if not wls:
+        raise ValueError("need at least one workload to refine against")
+    for w in wls:
+        if not isinstance(w, Workload):
+            raise TypeError(
+                f"expected Workload entries, got {type(w).__name__}")
+    if weights is None:
+        wts = np.full(len(wls), 1.0 / len(wls), np.float64)
+    else:
+        wts = np.asarray(list(weights), np.float64)
+        if wts.shape != (len(wls),):
+            raise ValueError(
+                f"weights shape {wts.shape} does not match "
+                f"{len(wls)} workloads")
+        if not np.all(wts > 0):
+            raise ValueError("workload weights must all be positive")
+        wts = wts / wts.sum()
+    return wls, wts
+
+
+def _combined_value(values: Sequence[float], weights: np.ndarray) -> float:
+    """The multi-workload scalarization: weighted geometric mean of the
+    per-workload objective values.  A single workload short-circuits to its
+    exact objective value (no exp/log round-trip), so one-workload
+    refinement reports bit-identically to the single-workload engine."""
+    vals = np.asarray(values, np.float64)
+    if vals.shape[0] == 1:
+        return float(vals[0])
+    return float(np.exp(np.sum(np.asarray(weights, np.float64)
+                               * np.log(vals))))
+
+
 def refine_codesign(
     spec: GridSpec,
     mixes: Sequence,
-    wl: Workload,
+    wl,
     flat_index: int,
     *,
     refine_axes: Sequence[str] = DEFAULT_REFINE_AXES,
     accel_axes: Sequence[str] = ACCEL_REFINE_AXES,
     objective: str = "edp",
+    method: str = "first_order",
+    weights: Optional[Sequence[float]] = None,
     steps: int = 32,
     lr: float = 0.1,
     span: float = 4.0,
@@ -784,6 +1011,8 @@ def refine_codesign(
     adaptive_gateways: bool = True,
     transfers_per_layer: int = 16,
     max_candidates: int = 1024,
+    tr_radius: float = 0.5,
+    max_sweeps: int = 4,
 ) -> Dict[str, object]:
     """Jointly refine one `codesign_pareto` frontier point over accelerator
     AND network axes, then snap back to a feasible integer design.
@@ -793,9 +1022,30 @@ def refine_codesign(
     ``relaxed=True`` mode replaces ceil(L/V) with max(L/V, 1) so per-chiplet
     `n_units`/`vector_size`, `mac_rate_hz` and `lambda_slot_energy_j` all
     carry nonzero gradients; zero-unit padding chiplets stay exactly
-    masked), and runs the same log-space projected-descent loop as
-    `refine_continuous` over the concatenated accelerator + `refine_axes`
-    network parameter vector.
+    masked), and descends the concatenated accelerator + `refine_axes`
+    network parameter vector in log-space.
+
+    `method` picks the descent + integerization strategy:
+
+    - "first_order": the fixed-lr projected-gradient loop shared with
+      `refine_continuous`, followed by the one-shot floor/ceil
+      round-and-rescore over the integer-neighbor cross product.
+    - "trust_region": second-order log-space trust-region descent
+      (`_trust_region_descent` — quadratic model from `jax.hessian` of the
+      relaxed objective, adaptive radius, accept/reject on exactly
+      re-evaluated steps, traced in forced float64 via `engine_x64`),
+      followed by the floor/ceil snap AND a coordinate-wise integer line
+      search (`_coordinate_int_search`) seeded at the snap winner: each
+      discrete axis walks in +-1 integer steps, every candidate exactly
+      re-scored through `evaluate_accelerator_grid`, to a local integer
+      optimum.  The line-search result weakly dominates the plain snap by
+      construction (it starts there).
+
+    `wl` is one `Workload` or a sequence of them; with several, the scalar
+    objective is the `weights`-weighted geometric mean of the per-workload
+    objective values (weights normalized to sum 1, uniform by default) and
+    the returned metrics carry a "per_workload" breakdown for the final
+    integer design.
 
     Round-and-rescore: every discrete axis (per-chiplet vector_size /
     n_units, and any refined network axis in `core.sweep.INTEGER_AXES`) is
@@ -808,24 +1058,35 @@ def refine_codesign(
     score, the seed is returned (improvement 0.0): the refined point is
     always a feasible integer design and never worse than its seed.
     Candidates whose network settings the topology rejects (e.g. SPACX
-    with < 8 gateways) are filtered out before scoring.
+    with < 8 gateways) are filtered out before scoring; the integer line
+    search scores rejected candidates as +inf.
 
-    Returns a dict with "seed"/"refined" {config, metrics, value} (configs
-    are `core.fabric.Fabric.from_config`-consumable), "improvement"
-    (fractional objective gain, >= 0), per-axis gradient-magnitude
-    "sensitivity" at the seed, the descent "loss_trace", the "relaxed"
-    (pre-snap) axis values, and "n_candidates" scored.
+    Returns a dict with "seed"/"refined" {config, metrics, per_workload,
+    value} (configs are `core.fabric.Fabric.from_config`-consumable;
+    "metrics" is the first workload's exact metric dict, "per_workload" the
+    full per-workload list, "value" the scalarized objective),
+    "improvement" (fractional objective gain, >= 0), per-axis
+    gradient-magnitude "sensitivity" at the seed, the descent "loss_trace",
+    the "relaxed" (pre-snap) axis values, "n_candidates" scored, plus
+    "method", "workloads"/"weights", and — for the trust-region method —
+    "tr_stats" (accept/reject counts, radius trajectory) and "line_search"
+    ({snap_value, value, n_scored, n_sweeps}).
     """
     from repro.core.accelerator import (
         ACCEL_REPORT_FIELDS, ChipletSpec, _accel_mix_math,
         evaluate_accelerator_grid, layer_columns)
 
     _check_objective(objective, ACCEL_REPORT_FIELDS, "refine_codesign")
+    if method not in ("first_order", "trust_region"):
+        raise ValueError(
+            f"unknown refine method {method!r}; valid methods are "
+            "'first_order' or 'trust_region'")
     bad = [a for a in accel_axes if a not in ACCEL_REFINE_AXES]
     if bad:
         raise KeyError(
             f"unknown accelerator refine axes {bad!r}; valid axes are "
             f"{list(ACCEL_REFINE_AXES)}")
+    wls, wts = _as_workload_batch(wl, weights)
 
     cfg = codesign_config_at(spec, mixes, flat_index)
     seed_mix = [ChipletSpec(int(c.n_units), int(c.vector_size))
@@ -886,16 +1147,22 @@ def refine_codesign(
     lo, hi = jnp.log(_as_f64(lo_f)), jnp.log(_as_f64(hi_f))
 
     # ---- relaxed differentiable loss: topology kernel + accel kernel ----
-    lc = {k: _as_f64(v) for k, v in layer_columns(wl).items()}
-    units0 = _as_f64([float(c.n_units) for c in seed_mix])
-    vec0 = _as_f64([float(c.vector_size) for c in seed_mix])
-    xfers = _as_f64(float(transfers_per_layer))
+    # layer columns stay host-side float64 and convert inside the traced
+    # function, so the trust-region path (traced under engine_x64) sees
+    # float64 constants while the first-order path keeps session precision
+    lcs_np = [{k: np.asarray(v, np.float64)
+               for k, v in layer_columns(w).items()} for w in wls]
+    units0_np = np.asarray([float(c.n_units) for c in seed_mix], np.float64)
+    vec0_np = np.asarray([float(c.vector_size) for c in seed_mix],
+                         np.float64)
 
-    def relaxed_metrics(theta):
+    def relaxed_metrics(theta, lc_np):
         x = jnp.exp(theta)
         c = {k: _as_f64(v) for k, v in cols.items()}
-        units, vec = units0, vec0
+        lc = {k: _as_f64(v) for k, v in lc_np.items()}
+        units, vec = _as_f64(units0_np), _as_f64(vec0_np)
         mac, slot = _as_f64(mac_rate_hz), _as_f64(lambda_slot_energy_j)
+        xfers = _as_f64(float(transfers_per_layer))
         for i, (kind, key, _) in enumerate(entries):
             if kind == "net":
                 c[key] = x[i]
@@ -919,15 +1186,39 @@ def refine_codesign(
         return {k: v[0] for k, v in m.items()}
 
     def loss_of(theta):
-        m = relaxed_metrics(theta)
-        if objective == "edp":
-            return jnp.log(m["energy_j"]) + jnp.log(m["latency_s"])
-        return jnp.log(m[objective])
+        # weighted sum of per-workload log objectives = log of the
+        # weighted-geomean scalarization (one workload: plain log loss)
+        total = 0.0
+        for wt, lc_np in zip(wts, lcs_np):
+            m = relaxed_metrics(theta, lc_np)
+            if objective == "edp":
+                term = jnp.log(m["energy_j"]) + jnp.log(m["latency_s"])
+            else:
+                term = jnp.log(m[objective])
+            total = total + float(wt) * term
+        return total
 
     value_and_grad = jax.jit(jax.value_and_grad(loss_of))
-    theta0 = jnp.clip(jnp.log(_as_f64(x0)), lo, hi)
-    _, best_theta, trace, grad0 = _projected_descent(
-        value_and_grad, theta0, lo, hi, steps, lr)
+    tr_stats: Optional[Dict[str, object]] = None
+    if method == "first_order":
+        theta0 = jnp.clip(jnp.log(_as_f64(x0)), lo, hi)
+        _, best_theta, trace, grad0 = _projected_descent(
+            value_and_grad, theta0, lo, hi, steps, lr)
+    else:
+        # second-order path: force float64 tracing/execution (the Hessian
+        # of the relaxed objective is too ill-conditioned for f32) and keep
+        # the box in exact f64 logs host-side
+        hess_fn = jax.jit(jax.hessian(loss_of))
+        lo64, hi64 = np.log(lo_f), np.log(hi_f)
+        theta0_np = np.clip(np.log(x0), lo64, hi64)
+        with engine_x64():
+            def _vg(t):
+                v, g = value_and_grad(_as_f64(t))
+                return float(v), np.asarray(g, np.float64)
+
+            _, best_theta, trace, grad0, tr_stats = _trust_region_descent(
+                _vg, lambda t: hess_fn(_as_f64(t)), theta0_np, lo64, hi64,
+                steps, radius=tr_radius)
     sensitivity = {lb: float(abs(g)) for lb, g in zip(labels, grad0)}
     x_best = np.clip(np.exp(np.asarray(best_theta, np.float64)), lo_f, hi_f)
 
@@ -1040,36 +1331,122 @@ def refine_codesign(
     mem_bw = cand_cols["n_mem_chiplets"] * cand_cols["mem_bw_bytes_per_s"]
     cand_mixes = [[ChipletSpec(int(u), int(v)) for (u, v) in chips]
                   for chips in mix_cands]
-    out = evaluate_accelerator_grid(
-        wl, cand_mixes, nets, cand_cols, mem_bw,
-        mac_rate_hz=refined_mac, lambda_slot_energy_j=refined_slot,
-        adaptive_gateways=adaptive_gateways,
-        transfers_per_layer=transfers_per_layer)
-    score = _objective_value(out, objective)
+    def _score_grid(ms, nets_, cols_, mbw_):
+        """Scalarized (M, N) candidate scores: the weights-weighted sum of
+        per-workload log objectives — i.e. the log of the weighted-geomean
+        objective, so argmin matches the scalarization exactly."""
+        total = None
+        for wt, w in zip(wts, wls):
+            o = evaluate_accelerator_grid(
+                w, ms, nets_, cols_, mbw_, mac_rate_hz=refined_mac,
+                lambda_slot_energy_j=refined_slot,
+                adaptive_gateways=adaptive_gateways,
+                transfers_per_layer=transfers_per_layer)
+            s = float(wt) * np.log(_objective_value(o, objective))
+            total = s if total is None else total + s
+        return total
+
+    score = _score_grid(cand_mixes, nets, cand_cols, mem_bw)
     mi, ni = np.unravel_index(int(np.argmin(score)), score.shape)
 
     def _score_single(mix, net_vals: Mapping[str, float], mac, slot):
-        """Exact (M=1, N=1) score — bit-identical to any later standalone
-        `evaluate_accelerator_grid` call on the same design."""
+        """Exact (M=1, N=1) per-workload scores — bit-identical to any later
+        standalone `evaluate_accelerator_grid` call on the same design.
+        Returns (per_workload_metric_dicts, scalarized_value)."""
         c1 = {k: np.full(1, v, np.float64) for k, v in cols.items()}
         for nm, v in net_vals.items():
             c1[nm][:] = float(v)
         n1 = _network_columns_arrays(c1, np.zeros(1, np.int64), (topology,))
         mbw = c1["n_mem_chiplets"] * c1["mem_bw_bytes_per_s"]
-        o = evaluate_accelerator_grid(
-            wl, [mix], n1, c1, mbw, mac_rate_hz=mac,
-            lambda_slot_energy_j=slot, adaptive_gateways=adaptive_gateways,
-            transfers_per_layer=transfers_per_layer)
-        return {k: float(v[0, 0]) for k, v in o.items()}
+        per = []
+        for w in wls:
+            o = evaluate_accelerator_grid(
+                w, [mix], n1, c1, mbw, mac_rate_hz=mac,
+                lambda_slot_energy_j=slot,
+                adaptive_gateways=adaptive_gateways,
+                transfers_per_layer=transfers_per_layer)
+            per.append({k: float(v[0, 0]) for k, v in o.items()})
+        value = _combined_value(
+            [float(_objective_value(m, objective)) for m in per], wts)
+        return per, value
 
     win_net = dict(refined_net)
     win_net.update({nm: float(v) for nm, v in valid_net[ni].items()})
-    win_mix = cand_mixes[mi]
-    win_metrics = _score_single(win_mix, win_net, refined_mac, refined_slot)
-    win_value = float(_objective_value(win_metrics, objective))
-    seed_metrics = _score_single(
+    win_mix = list(cand_mixes[mi])
+
+    line_search: Optional[Dict[str, object]] = None
+    if method == "trust_region":
+        # coordinate-wise integer line search seeded at the floor/ceil snap
+        # winner: walk every discrete axis in +-1 steps (others held), each
+        # candidate exactly re-scored, to a local integer optimum — the
+        # result can only improve on the snap (it starts there)
+        ls_vars: Dict[Tuple[str, object], int] = {}
+        ls_lo: Dict[Tuple[str, object], int] = {}
+        ls_hi: Dict[Tuple[str, object], int] = {}
+        for i, (kind, key, _) in enumerate(entries):
+            if kind == "units":
+                v = int(win_mix[key].n_units)
+            elif kind == "vec":
+                v = int(win_mix[key].vector_size)
+            elif kind == "net" and key in net_int:
+                v = int(round(win_net[key]))
+            else:
+                continue
+            ls_vars[(kind, key)] = v
+            ls_lo[(kind, key)] = min(int(np.ceil(lo_f[i] - 1e-9)), v)
+            ls_hi[(kind, key)] = max(int(np.floor(hi_f[i] + 1e-9)), v)
+
+        def _ls_score(vals: Mapping) -> float:
+            mix = [ChipletSpec(
+                int(vals.get(("units", j), win_mix[j].n_units)),
+                int(vals.get(("vec", j), win_mix[j].vector_size)))
+                for j in range(C)]
+            if not any(csp.n_units > 0 for csp in mix):
+                return float(np.inf)
+            nv = dict(win_net)
+            for nm in net_int:
+                if ("net", nm) in vals:
+                    nv[nm] = float(vals[("net", nm)])
+            c1 = {k: np.full(1, v, np.float64) for k, v in cols.items()}
+            for nm, v in nv.items():
+                c1[nm][:] = float(v)
+            try:
+                n1 = _network_columns_arrays(
+                    c1, np.zeros(1, np.int64), (topology,))
+            except (ValueError, FloatingPointError):
+                return float(np.inf)  # topology rejects this integer point
+            mbw = c1["n_mem_chiplets"] * c1["mem_bw_bytes_per_s"]
+            return float(_score_grid([mix], n1, c1, mbw)[0, 0])
+
+        if ls_vars:
+            snap_score = _ls_score(ls_vars)
+            best_vals, best_score, ls_stats = _coordinate_int_search(
+                ls_vars, ls_lo, ls_hi, _ls_score, max_sweeps=max_sweeps)
+            if best_score < snap_score:
+                win_mix = [ChipletSpec(
+                    int(best_vals.get(("units", j), win_mix[j].n_units)),
+                    int(best_vals.get(("vec", j), win_mix[j].vector_size)))
+                    for j in range(C)]
+                for nm in net_int:
+                    if ("net", nm) in best_vals:
+                        win_net[nm] = float(best_vals[("net", nm)])
+            line_search = {
+                "snap_value": float(np.exp(snap_score)),
+                "value": float(np.exp(min(best_score, snap_score))),
+                "n_scored": int(ls_stats["n_scored"]),
+                "n_sweeps": int(ls_stats["n_sweeps"]),
+            }
+        else:
+            line_search = {"snap_value": float(np.exp(score[mi, ni])),
+                           "value": float(np.exp(score[mi, ni])),
+                           "n_scored": 0, "n_sweeps": 0}
+
+    win_per, win_value = _score_single(
+        win_mix, win_net, refined_mac, refined_slot)
+    win_metrics = win_per[0]
+    seed_per, seed_value = _score_single(
         seed_mix, {}, float(mac_rate_hz), float(lambda_slot_energy_j))
-    seed_value = float(_objective_value(seed_metrics, objective))
+    seed_metrics = seed_per[0]
 
     seed_cfg: Dict[str, object] = {"topology": topology, **cfg}
     seed_cfg.update({
@@ -1085,27 +1462,45 @@ def refine_codesign(
             "mac_rate_hz": refined_mac,
             "lambda_slot_energy_j": refined_slot})
         refined = {"config": ref_cfg, "metrics": win_metrics,
-                   "value": win_value, "chiplets": list(win_mix)}
+                   "per_workload": win_per, "value": win_value,
+                   "chiplets": list(win_mix)}
     else:
         # no snapped candidate beat the exact seed score: keep the seed, so
         # the refined point is never worse than where it started
         refined = {"config": dict(seed_cfg), "metrics": dict(seed_metrics),
+                   "per_workload": [dict(m) for m in seed_per],
                    "value": seed_value, "chiplets": list(seed_mix)}
 
     return {
         "flat_index": int(flat_index),
         "topology": topology,
         "objective": objective,
+        "method": method,
+        "workloads": [w.name for w in wls],
+        "weights": [float(x) for x in wts],
         "labels": labels,
         "seed": {"config": seed_cfg, "metrics": seed_metrics,
-                 "value": seed_value},
+                 "per_workload": seed_per, "value": seed_value},
         "refined": refined,
         "improvement": float(1.0 - refined["value"] / seed_value),
         "sensitivity": sensitivity,
         "loss_trace": trace,
         "relaxed": {lb: float(x_best[i]) for i, lb in enumerate(labels)},
         "n_candidates": len(cand_mixes) * n_net,
+        "tr_stats": tr_stats,
+        "line_search": line_search,
     }
+
+
+def refine_trust_region(spec: GridSpec, mixes: Sequence, wl, flat_index: int,
+                        **kwargs) -> Dict[str, object]:
+    """`refine_codesign(method="trust_region")`: second-order log-space
+    trust-region descent on the relaxed objective followed by a
+    coordinate-wise integer line search on the discrete axes, optionally
+    jointly over a weighted batch of workloads.  See `refine_codesign` for
+    the full contract."""
+    kwargs.setdefault("method", "trust_region")
+    return refine_codesign(spec, mixes, wl, flat_index, **kwargs)
 
 
 def _front_objective(front: ParetoFront, objective: str) -> np.ndarray:
@@ -1125,15 +1520,23 @@ def refine_front(
     front: ParetoFront,
     spec: GridSpec,
     mixes: Sequence,
-    wl: Workload,
+    wl,
     *,
     top_k: Optional[int] = None,
     objective: str = "edp",
+    method: str = "first_order",
     **kwargs,
 ) -> Dict[str, object]:
     """Refine every (or the `top_k` best-objective) row of a
     `codesign_pareto` front through `refine_codesign`, then merge the
     refined integer designs back into the seed front with `merge_fronts`.
+
+    `method` selects the descent engine per row ("first_order" or
+    "trust_region" — see `refine_codesign`); `wl` may be a single
+    `Workload` or a weighted batch (pass `weights=` through kwargs), in
+    which case each row is refined against the scalarized multi-workload
+    objective and the merged front's points are the FIRST workload's exact
+    metrics for the final integer designs.
 
     Merging unions the point sets, so the merged front weakly dominates the
     seed front by construction — asserted before returning (a violation
@@ -1153,7 +1556,7 @@ def refine_front(
     order = np.argsort(_front_objective(front, objective), kind="stable")
     chosen = order if top_k is None else order[:max(1, int(top_k))]
     results = [refine_codesign(spec, mixes, wl, int(front.indices[i]),
-                               objective=objective, **kwargs)
+                               objective=objective, method=method, **kwargs)
                for i in chosen]
     obj_names = front.objectives
     ref_pts = np.asarray(

@@ -14,7 +14,6 @@ CrossLight line of work (noncoherent photonic accelerators quantize to <=8b).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Dict, List
 
 from repro.core.power import Traffic

@@ -15,10 +15,8 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-import time
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
 import numpy as np
 
 from repro.models.config import ModelConfig

@@ -28,7 +28,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs as C
 from repro.launch import hlo_analysis as H

@@ -17,7 +17,6 @@ Mesh semantics (DESIGN.md §2):
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro import configs as C
 from repro.data.pipeline import DataConfig

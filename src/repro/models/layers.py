@@ -12,7 +12,6 @@ photonic-MAC QAT numerics (2.5D-CrossLight broadcast-and-weight quantization)
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Dict, Optional, Tuple
 

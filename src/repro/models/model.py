@@ -23,7 +23,6 @@ trees mirror the params for the sharding rules in `repro.parallel`.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -21,16 +21,15 @@ The paper's interposer insight mapped to mesh collectives (DESIGN.md §2):
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 
-from repro.core.planner import plan_collective_channels as plan_channels  # re-export
+from repro.core.planner import plan_collective_channels as plan_channels  # noqa: F401 — re-export
 
 
 def _pad_to(x: jax.Array, mult: int):

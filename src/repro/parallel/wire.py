@@ -36,7 +36,6 @@ Quantization scales are per-layer for stacked leaves, per-tensor otherwise
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

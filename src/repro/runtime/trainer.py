@@ -16,8 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from pathlib import Path
 from typing import Any, Dict, Optional
 
 import jax
@@ -28,12 +26,11 @@ from repro.checkpoint import store
 from repro.core.fabric import degrade, get_fabric, overlapped_step_s
 from repro.core.faults import FabricUnusableError, FaultScenario
 from repro.core.planner import plan_collective_channels
-from repro.data.pipeline import DataConfig, DeadlineMonitor, Prefetcher, SyntheticLM
+from repro.data.pipeline import DataConfig, DeadlineMonitor, SyntheticLM
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.optim import adamw
 from repro.parallel import sharding as S
-from repro.parallel import actx
 
 
 class FailureInjected(RuntimeError):

@@ -55,12 +55,20 @@ def test_sweep_bench_smoke():
     assert out["pass"], out
 
 
-def test_pareto_bench_smoke():
+@pytest.fixture(scope="module")
+def pareto_out():
+    """One smoke pareto/co-design bench run shared by the tests below (it
+    now spans the first-order AND trust-region refinements, so run it
+    once)."""
+    import benchmarks.pareto_bench as b
+    return b.run(csv=False, smoke=True)
+
+
+def test_pareto_bench_smoke(pareto_out):
     """Pareto/co-design bench: fronts exact, perf-regression gates hold
     (chunked within the smoke ratio bar of monolithic, batched over scalar
     over the smoke bar)."""
-    import benchmarks.pareto_bench as b
-    out = b.run(csv=False, smoke=True)
+    out = pareto_out
     assert out["checks"]["net_front_streaming_equals_monolithic"]
     assert out["checks"]["net_front_matches_bruteforce"]
     assert out["checks"]["codesign_front_streaming_equals_monolithic"]
@@ -76,6 +84,24 @@ def test_pareto_bench_smoke():
     assert out["codesign"]["n_joint_points"] < 1_000_000
     assert not out["checks"]["codesign_grid_at_least_1e6"]
     assert "codesign_grid_at_least_1e6" not in out["required_checks"]
+
+
+def test_pareto_bench_trust_region_gates(pareto_out):
+    """The trust-region multi-workload section: its merged front weakly
+    dominates the first-order refined front, every refined design re-scores
+    bit-identically, and both gates are REQUIRED even in smoke mode (no
+    exemption — the contracts are exact, not throughput-dependent)."""
+    out = pareto_out
+    assert out["checks"]["trust_region_front_dominates_first_order"]
+    assert out["checks"]["trust_region_rescore_bit_identical"]
+    assert "trust_region_front_dominates_first_order" in out["required_checks"]
+    assert "trust_region_rescore_bit_identical" in out["required_checks"]
+    tr = out["trust_region_front"]
+    assert len(tr["workloads"]) == 3  # joint refinement, not single-workload
+    assert tr["trust_region_front_size"] >= 1
+    assert tr["seeds_refined"] >= 1
+    ls = tr["line_search"]
+    assert ls and all(s["value"] <= s["snap_value"] for s in ls)
 
 
 @pytest.fixture(scope="module")
@@ -126,17 +152,24 @@ def test_roofline_fabric_columns():
     assert b.fabric_markdown_table(rows).count("|") > 20
 
 
-def test_run_summary_consolidation(fabric_whatif_out):
+def test_run_summary_consolidation(fabric_whatif_out, pareto_out):
     """benchmarks.run consolidates per-bench checks + perf gates into one
     summary (the artifacts/summary.json payload)."""
     import benchmarks.run as runner
     import benchmarks.sweep_bench as sb
-    import benchmarks.pareto_bench as pb
     results = {"sweep": sb.run(csv=False, smoke=True),
-               "pareto": pb.run(csv=False, smoke=True),
+               "pareto": pareto_out,
                "fabric_whatif": fabric_whatif_out}
     summary = runner.build_summary(results)
     assert summary["pass"], summary["checks"]
+    # the trust-region gates are folded in as required in both modes, and
+    # the refinement-trajectory block records both engines
+    assert summary["checks"]["pareto/trust_region_front_dominates_first_order"]
+    assert summary["checks"]["pareto/trust_region_rescore_bit_identical"]
+    ref = summary["refinement"]
+    assert ref["trust_region_dominates_first_order"] is True
+    assert ref["trust_region"]["best_improvement"] is not None
+    assert ref["first_order"]["merged_front_size"] >= 1
     assert summary["perf"]["batched_over_scalar"]["pass"]
     assert summary["perf"]["chunked_over_monolithic_network"]["pass"]
     assert summary["perf"]["chunked_over_monolithic_codesign"]["pass"]
@@ -180,6 +213,29 @@ def test_resilience_benchmark_smoke():
     assert out["required_checks"] == list(out["checks"])
     assert out["pass"], out["checks"]
     assert (b.ARTIFACTS / "resilience.json").exists()
+
+
+def test_report_creates_and_updates_experiments(tmp_path):
+    """benchmarks.report: regenerating into a missing file seeds it with
+    the header + generated-tables marker instead of crashing on the
+    FileNotFoundError (the fresh-checkout regression), a second run is
+    idempotent, and hand-written prose above the marker survives."""
+    import benchmarks.report as report
+    target = tmp_path / "EXPERIMENTS.md"
+    report.main(path=target)
+    text = target.read_text()
+    assert text.startswith("# EXPERIMENTS")
+    assert report.MARK in text
+    report.main(path=target)
+    assert target.read_text() == text  # idempotent
+    target.write_text("# my notes\n\ncustom prose\n\n" + report.MARK + "\n")
+    report.main(path=target)
+    out = target.read_text()
+    assert out.startswith("# my notes")
+    assert "custom prose" in out and report.MARK in out
+    # the real module-level target exists in this checkout (the repo ships
+    # a seeded EXPERIMENTS.md so `python -m benchmarks.report` always works)
+    assert report.EXPERIMENTS.exists()
 
 
 def test_collectives_benchmark_smoke():

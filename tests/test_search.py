@@ -43,6 +43,8 @@ from repro.core.sweep import (
 from repro.core.search import (
     OBJECTIVES,
     ParetoFront,
+    _coordinate_int_search,
+    _trust_region_descent,
     codesign_pareto,
     merge_fronts,
     pareto_front,
@@ -53,6 +55,7 @@ from repro.core.search import (
     refine_continuous,
     refine_front,
     refine_front_point,
+    refine_trust_region,
 )
 
 TRAFFIC = Traffic(bytes_read=2e8, bytes_written=7e7, n_transfers=320)
@@ -558,3 +561,231 @@ def test_refine_front_dominates_seed_and_configs_roundtrip():
     # sensitivities cover both network and accelerator axes
     assert set(out["sensitivity"]) >= {"modulation_rate_bps",
                                        "lambda_slot_energy_j"}
+
+
+# ---------------------------------------------------------------------------
+# second-order refinement: trust-region descent + integer line search
+# ---------------------------------------------------------------------------
+
+
+def test_trust_region_descent_exact_quadratic_converges():
+    """On an anisotropic quadratic with its exact Hessian the loop takes
+    pure accepted Newton steps (the model is exact, so rho == 1, nothing
+    is ever rejected) and reaches the minimizer."""
+    A = np.diag([1.0, 25.0])
+    c = np.array([0.4, -0.7])
+
+    def vg(x):
+        d = np.asarray(x, np.float64) - c
+        return 0.5 * float(d @ A @ d), A @ d
+
+    lo, hi = np.full(2, -3.0), np.full(2, 3.0)
+    best, theta, trace, g0, st = _trust_region_descent(
+        vg, lambda x: A, np.zeros(2), lo, hi, steps=12)
+    assert best == trace[-1] <= trace[0]
+    assert np.allclose(theta, c, atol=1e-6)
+    assert best == pytest.approx(0.0, abs=1e-10)
+    assert st["rejected"] == 0 and st["accepted"] >= 1
+    assert np.allclose(g0, -A @ c)  # float64 gradient at the seed
+
+
+def test_trust_region_rejects_lying_gradient_and_shrinks_radius():
+    """A gradient that points uphill makes every proposed step increase
+    the exact objective: each one must be rejected on the exact re-score,
+    the radius must shrink strictly after every rejection until it
+    collapses, and the returned design is the untouched seed — the
+    never-worse-than-seed guarantee under a hostile model."""
+    def vg(x):
+        x = np.asarray(x, np.float64)
+        return float(x @ x), -2.0 * x  # honest value, lying gradient
+
+    x0 = np.array([1.0, -1.5])
+    best, theta, trace, _, st = _trust_region_descent(
+        vg, lambda x: 2.0 * np.eye(2), x0,
+        np.full(2, -4.0), np.full(2, 4.0), steps=30)
+    assert st["accepted"] == 0 and st["rejected"] >= 3
+    rt = st["radius_trace"]
+    assert len(rt) == st["rejected"]
+    assert all(b < a for a, b in zip(rt, rt[1:]))  # strictly shrinking
+    assert st["stopped_early"] and st["final_radius"] < 1e-5
+    assert best == trace[0] and len(trace) == 1
+    assert np.array_equal(theta, x0)  # never worse than the seed
+
+
+def test_trust_region_pins_against_box():
+    """A minimizer outside the box: the loop walks to the boundary, then
+    stops early once the box admits no further move, reporting the clipped
+    boundary point."""
+    def vg(x):
+        d = np.asarray(x, np.float64) - 10.0
+        return float(d @ d), 2.0 * d
+
+    best, theta, trace, _, st = _trust_region_descent(
+        vg, lambda x: 2.0 * np.eye(2), np.zeros(2),
+        np.full(2, -1.0), np.full(2, 1.0), steps=20, radius=0.5)
+    assert np.allclose(theta, 1.0)  # pinned at the upper corner
+    assert st["stopped_early"]
+    assert best == pytest.approx(2 * 81.0)
+
+
+def test_coordinate_int_search_separable_optimum_and_memoization():
+    """Separable convex scores: the walk reaches the exact integer optimum
+    and the memo cache guarantees each design is scored exactly once."""
+    calls = []
+
+    def score(v):
+        calls.append(1)
+        return (v["a"] - 7) ** 2 + (v["b"] - 3) ** 2
+
+    best, val, st = _coordinate_int_search(
+        {"a": 2, "b": 10}, {"a": 1, "b": 1}, {"a": 16, "b": 16}, score)
+    assert best == {"a": 7, "b": 3} and val == 0.0
+    assert st["n_scored"] == len(calls)  # never re-scored
+    assert st["n_sweeps"] >= 2
+
+
+def test_coordinate_int_search_bounds_and_infeasible():
+    """Bounds clamp the walk and +inf marks infeasible designs: the search
+    settles on the best reachable feasible design, never leaving the box."""
+    def score(v):
+        if v["a"] + v["b"] > 9:
+            return float("inf")
+        return -(v["a"] + v["b"])
+
+    best, val, st = _coordinate_int_search(
+        {"a": 4, "b": 4}, {"a": 1, "b": 1}, {"a": 6, "b": 6}, score)
+    assert best["a"] + best["b"] == 9 and val == -9.0
+    assert 1 <= best["a"] <= 6 and 1 <= best["b"] <= 6
+
+
+TR_AXES = ("modulation_rate_bps", "mem_bw_bytes_per_s",
+           "interposer_side_cm", "n_gateways")
+
+
+def test_refine_codesign_trust_region_never_worse_and_rescores_exact():
+    """method="trust_region": the refined point is a feasible integer
+    design, never worse than its seed, and its reported metrics re-score
+    bit-identically through a standalone `evaluate_accelerator_grid` call
+    — the same exactness contract the first-order engine is held to."""
+    from repro.core.accelerator import evaluate_accelerator_grid
+    from repro.core.sweep import _network_columns_arrays
+    wl, mixes, front, spec = _codesign_refine_setup()
+    r = refine_trust_region(spec, mixes, wl, int(front.indices[0]),
+                            steps=6, refine_axes=TR_AXES)
+    assert r["method"] == "trust_region"
+    assert r["refined"]["value"] <= r["seed"]["value"]
+    assert r["improvement"] >= 0.0
+    st = r["tr_stats"]
+    assert st["accepted"] + st["rejected"] == len(st["radius_trace"]) <= 6
+    cfg = r["refined"]["config"]
+    for c in cfg["chiplets"]:
+        assert isinstance(c.n_units, int) and isinstance(c.vector_size, int)
+    assert any(c.n_units > 0 for c in cfg["chiplets"])
+    assert cfg["n_gateways"] == float(int(cfg["n_gateways"]))
+    cols = {k: np.full(1, v, np.float64) for k, v in spec.base.items()}
+    for k, v in cfg.items():
+        if k in cols:
+            cols[k][:] = float(v)
+    nets = _network_columns_arrays(cols, np.zeros(1, np.int64),
+                                   (cfg["topology"],))
+    out = evaluate_accelerator_grid(
+        wl, [cfg["chiplets"]], nets, cols,
+        cols["n_mem_chiplets"] * cols["mem_bw_bytes_per_s"],
+        mac_rate_hz=cfg["mac_rate_hz"],
+        lambda_slot_energy_j=cfg["lambda_slot_energy_j"])
+    for k, v in r["refined"]["metrics"].items():
+        assert float(out[k][0, 0]) == v, k
+
+
+def test_refine_codesign_tr_line_search_dominates_snap():
+    """The integer line search is seeded at the floor/ceil snap winner, so
+    its value weakly dominates the snap value on every seed; it must also
+    actually explore (score additional integer designs) somewhere across
+    three frontier seeds."""
+    wl, mixes, front, spec = _codesign_refine_setup()
+    order = np.argsort(front.points[:, 0] * front.points[:, 1])
+    searches = []
+    for i in order[:3]:
+        r = refine_trust_region(spec, mixes, wl, int(front.indices[i]),
+                                steps=4, refine_axes=TR_AXES)
+        assert r["refined"]["value"] <= r["seed"]["value"]
+        searches.append(r["line_search"])
+    for s in searches:
+        assert s["value"] <= s["snap_value"]
+    assert any(s["n_scored"] > 1 for s in searches)
+
+
+def test_refine_codesign_multiworkload_geomean_and_per_workload_rescore():
+    """Joint refinement over two weighted workloads: per-workload exact
+    metrics come back for seed and refined designs, the combined value is
+    their weighted geometric mean, each per-workload dict re-scores
+    bit-identically, and malformed weights are rejected eagerly."""
+    from repro.core.accelerator import evaluate_accelerator_grid
+    from repro.core.sweep import _network_columns_arrays
+    wl, mixes, front, spec = _codesign_refine_setup()
+    wls = [wl, CNN_WORKLOADS["ResNet18"]()]
+    r = refine_trust_region(spec, mixes, wls, int(front.indices[0]),
+                            steps=4, refine_axes=TR_AXES,
+                            weights=(3.0, 1.0))
+    assert r["workloads"] == [w.name for w in wls]
+    assert r["weights"] == pytest.approx([0.75, 0.25])
+    for blk in (r["seed"], r["refined"]):
+        assert len(blk["per_workload"]) == 2
+        edps = [m["energy_j"] * m["latency_s"] for m in blk["per_workload"]]
+        geo = float(np.exp(0.75 * np.log(edps[0]) + 0.25 * np.log(edps[1])))
+        assert blk["value"] == pytest.approx(geo, rel=1e-12)
+    cfg = r["refined"]["config"]
+    cols = {k: np.full(1, v, np.float64) for k, v in spec.base.items()}
+    for k, v in cfg.items():
+        if k in cols:
+            cols[k][:] = float(v)
+    nets = _network_columns_arrays(cols, np.zeros(1, np.int64),
+                                   (cfg["topology"],))
+    for w, per in zip(wls, r["refined"]["per_workload"]):
+        out = evaluate_accelerator_grid(
+            w, [cfg["chiplets"]], nets, cols,
+            cols["n_mem_chiplets"] * cols["mem_bw_bytes_per_s"],
+            mac_rate_hz=cfg["mac_rate_hz"],
+            lambda_slot_energy_j=cfg["lambda_slot_energy_j"])
+        for k, v in per.items():
+            assert float(out[k][0, 0]) == v, (w.name, k)
+    with pytest.raises(ValueError, match="weights"):
+        refine_codesign(spec, mixes, wls, int(front.indices[0]),
+                        weights=(1.0,))
+    with pytest.raises(ValueError, match="positive"):
+        refine_codesign(spec, mixes, wls, int(front.indices[0]),
+                        weights=(1.0, -1.0))
+
+
+def test_refine_codesign_method_validated_eagerly():
+    wl, mixes, front, spec = _codesign_refine_setup()
+    with pytest.raises(ValueError, match="method"):
+        refine_codesign(spec, mixes, wl, int(front.indices[0]),
+                        method="newton")
+
+
+def test_refine_continuous_metrics_describe_clipped_design():
+    """Regression: with a tight box the projection is active at the end of
+    the descent, and the reported metrics used to be evaluated at the
+    pre-clip iterate — silently describing a different design than the
+    reported one.  The metrics must re-evaluate, at the reported refined
+    values, to the reported numbers."""
+    t = CNN_WORKLOADS["LeNet5"]().traffic()
+    axes = ("modulation_rate_bps", "mem_bw_bytes_per_s")
+    probe = refine_continuous("trine", {}, t, refine_axes=axes, steps=0)
+    tight = {nm: (v * 0.999, v * 1.001) for nm, v in probe["start"].items()}
+    r = refine_continuous("trine", {}, t, refine_axes=axes, steps=10,
+                          lr=0.5, bounds=tight)
+    assert r["refined_value"] <= r["start_value"] * (1 + 1e-12)
+    # the big log-space steps pin at least one axis against the tight box
+    # (projection happens in float32 log-space, so "at the bound" means
+    # within float32 resolution of it, not bit-exactly on it)
+    at_bound = [nm for nm, v in r["refined"].items()
+                if min(abs(v - tight[nm][0]),
+                       abs(v - tight[nm][1])) <= 1e-5 * v]
+    assert at_bound, r["refined"]
+    # re-evaluate the metrics AT the reported design via a steps=0 probe
+    r2 = refine_continuous("trine", dict(r["refined"]), t, refine_axes=axes,
+                           steps=0)
+    for k, v in r["metrics"].items():
+        assert r2["metrics"][k] == pytest.approx(v, rel=1e-9), k

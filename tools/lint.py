@@ -1,0 +1,153 @@
+"""Static-analysis gate: byte-compile + import-hygiene over the tree.
+
+  python tools/lint.py            # or: python -m tools.lint
+
+Two passes, no third-party dependencies required:
+
+1. `compileall` — every file under the checked roots must byte-compile
+   (syntax errors fail the gate before any test or benchmark runs).
+2. pyflakes when it is installed; otherwise a vendored AST fallback that
+   reports unused imports and `import *` usage.  The fallback is
+   deliberately conservative: `__init__.py` files are exempt (re-export
+   modules), a name appearing anywhere in the file source (including
+   strings and `__all__`) counts as used, and lines carrying a `# noqa`
+   marker are skipped.
+
+`run()` returns {"ok", "engine", "findings", "n_files"} and is what
+`benchmarks.run` folds into the required-check summary; `main()` prints
+findings and exits non-zero when the gate fails.
+"""
+
+from __future__ import annotations
+
+import ast
+import compileall
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+REPO = Path(__file__).resolve().parents[1]
+DEFAULT_ROOTS = ("src", "benchmarks", "examples", "tools")
+
+
+def _iter_sources(roots) -> List[Path]:
+    out: List[Path] = []
+    for root in roots:
+        p = REPO / root
+        if p.is_file():
+            out.append(p)
+        elif p.is_dir():
+            out.extend(sorted(q for q in p.rglob("*.py")
+                              if "__pycache__" not in q.parts))
+    return out
+
+
+def _fallback_check(path: Path) -> List[str]:
+    """Vendored unused-import / import-star detector for when pyflakes is
+    not installed.  A finding is "<file>:<line>: <message>"."""
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:  # compileall already flags it; keep a record
+        return [f"{path}:{e.lineno}: syntax error: {e.msg}"]
+    if path.name == "__init__.py":
+        return []  # package re-export surface: unused imports are the point
+    lines = src.splitlines()
+
+    def _noqa(lineno: int) -> bool:
+        return 0 < lineno <= len(lines) and "noqa" in lines[lineno - 1]
+
+    imported: Dict[str, int] = {}
+    findings: List[str] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = (a.asname or a.name).split(".")[0]
+                if not _noqa(node.lineno):
+                    imported.setdefault(name, node.lineno)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    if not _noqa(node.lineno):
+                        findings.append(
+                            f"{path}:{node.lineno}: import * from "
+                            f"{node.module or '.'} hides unused names")
+                    continue
+                if not _noqa(node.lineno):
+                    imported.setdefault(a.asname or a.name, node.lineno)
+
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            # pick up dotted roots like `os.path` from `import os`
+            base = node
+            while isinstance(base, ast.Attribute):
+                base = base.value
+            if isinstance(base, ast.Name):
+                used.add(base.id)
+    # a name mentioned in any string literal (doctests, __all__ built from
+    # strings, jitted-function registries) counts as used — conservative
+    text_blob = src
+    for name, lineno in sorted(imported.items(), key=lambda kv: kv[1]):
+        if name in used:
+            continue
+        if f'"{name}"' in text_blob or f"'{name}'" in text_blob:
+            continue
+        findings.append(f"{path}:{lineno}: unused import {name!r}")
+    return findings
+
+
+def run(roots=DEFAULT_ROOTS) -> Dict[str, object]:
+    """Run both passes over `roots` (repo-relative).  Never raises."""
+    files = _iter_sources(roots)
+    compile_ok = True
+    for root in roots:
+        p = REPO / root
+        if p.is_dir():
+            compile_ok &= bool(compileall.compile_dir(
+                str(p), quiet=2, force=False))
+        elif p.is_file():
+            compile_ok &= bool(compileall.compile_file(str(p), quiet=2))
+
+    findings: List[str] = []
+    try:
+        from pyflakes.api import checkPath
+        from pyflakes.reporter import Reporter
+        import io
+        engine = "pyflakes"
+        for f in files:
+            out, err = io.StringIO(), io.StringIO()
+            checkPath(str(f), Reporter(out, err))
+            findings.extend(x for x in out.getvalue().splitlines() if x)
+            findings.extend(x for x in err.getvalue().splitlines() if x)
+    except ImportError:
+        engine = "fallback-ast"
+        for f in files:
+            findings.extend(_fallback_check(f))
+
+    return {
+        "ok": bool(compile_ok) and not findings,
+        "compile_ok": bool(compile_ok),
+        "engine": engine,
+        "findings": findings,
+        "n_files": len(files),
+        "roots": list(roots),
+    }
+
+
+def main(argv=None) -> int:
+    roots = (argv if argv else None) or DEFAULT_ROOTS
+    res = run(tuple(roots))
+    print(f"lint: engine={res['engine']} files={res['n_files']} "
+          f"compile_ok={res['compile_ok']} findings={len(res['findings'])}")
+    for f in res["findings"]:
+        print(f"  {f}")
+    return 0 if res["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
